@@ -1,0 +1,111 @@
+"""Paper Figs 6-7: FLASH-analogue checkpoint I/O at scale.
+
+Fig 6 left : weak scaling in ranks (independent I/O) -> constant trace.
+Fig 6 right: scaling in iterations -> stepwise growth at each new output
+             file set; the 'rolling' mitigation flattens it.
+Fig 7      : collective I/O -- trace size tracks the aggregator count,
+             which saturates at the stripe count.
+
+CSV to artifacts/bench/flash_{weak,iters,collective}.csv.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import shutil
+import tempfile
+from typing import List
+
+from repro.core.recorder import RecorderConfig
+
+from .workloads import flash_rank, run_ranks
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+CFG = RecorderConfig(timestamps=False)
+
+
+def _run(nprocs, **kw):
+    d = tempfile.mkdtemp()
+    try:
+        return run_ranks(flash_rank, nprocs, CFG, data_dir=d, **kw)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def weak_scaling(nprocs_list=(16, 64, 256, 1024), iterations=100) -> List[dict]:
+    rows = []
+    for np_ in nprocs_list:
+        r = _run(np_, iterations=iterations, mode="independent")
+        rows.append({"nprocs": np_, "iterations": iterations,
+                     "pattern_bytes": r["pattern_bytes"],
+                     "n_records": r["n_records"],
+                     "n_unique_cfgs": r["n_unique_cfgs"]})
+    return rows
+
+
+def iteration_scaling(iters_list=(100, 200, 400, 800), nprocs=64,
+                      rolling=False) -> List[dict]:
+    rows = []
+    for it in iters_list:
+        r = _run(nprocs, iterations=it, ckpt_every=20, rolling=rolling)
+        rows.append({"nprocs": nprocs, "iterations": it,
+                     "rolling": rolling,
+                     "pattern_bytes": r["pattern_bytes"],
+                     "n_records": r["n_records"]})
+    return rows
+
+
+def collective(nprocs_list=(64, 128, 256, 512, 1024), stripe=8,
+               iterations=40) -> List[dict]:
+    rows = []
+    for np_ in nprocs_list:
+        r = _run(np_, iterations=iterations, mode="collective",
+                 stripe=stripe)
+        rows.append({"nprocs": np_, "stripe": stripe,
+                     "aggregators": min(stripe, max(1, np_ // 64)),
+                     "pattern_bytes": r["pattern_bytes"],
+                     "n_unique_cfgs": r["n_unique_cfgs"]})
+    return rows
+
+
+def main(fast: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    out = []
+    wk = weak_scaling((16, 64, 256) if fast else (16, 64, 256, 1024),
+                      iterations=40 if fast else 100)
+    with open(os.path.join(ART, "flash_weak.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, wk[0].keys())
+        w.writeheader()
+        w.writerows(wk)
+    out.append(f"flash_weak,first={wk[0]['pattern_bytes']},"
+               f"last={wk[-1]['pattern_bytes']},"
+               f"records_first={wk[0]['n_records']},"
+               f"records_last={wk[-1]['n_records']}")
+    its = iteration_scaling((40, 80, 160) if fast else (100, 200, 400, 800),
+                            nprocs=16 if fast else 64)
+    its += iteration_scaling((40, 80, 160) if fast else (100, 200, 400, 800),
+                             nprocs=16 if fast else 64, rolling=True)
+    with open(os.path.join(ART, "flash_iters.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, its[0].keys())
+        w.writeheader()
+        w.writerows(its)
+    half = len(its) // 2
+    out.append(f"flash_iters,growing={its[half-1]['pattern_bytes']},"
+               f"rolling={its[-1]['pattern_bytes']}")
+    co = collective((64, 128, 256) if fast else (64, 128, 256, 512, 1024),
+                    stripe=8, iterations=20 if fast else 40)
+    co += collective((64, 128, 256) if fast else (64, 128, 256, 512, 1024),
+                     stripe=32, iterations=20 if fast else 40)
+    with open(os.path.join(ART, "flash_collective.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, co[0].keys())
+        w.writeheader()
+        w.writerows(co)
+    out.append(f"flash_collective,stripe8_last={co[len(co)//2-1]['pattern_bytes']},"
+               f"stripe32_last={co[-1]['pattern_bytes']}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,91 @@
+"""Per-kernel micro-benchmarks.
+
+Pallas-interpret timings on CPU measure the Python emulator, not TPU perf;
+the portable numbers are (a) the XLA-path wall times on this host and
+(b) the analytic FLOP/byte counts that feed the Section Roofline analysis.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.timestamps import delta_zigzag_encode
+from repro.kernels.delta_encode.ops import delta_zigzag
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.models.layers import flash_attention_xla
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def _timeit(fn, *args, reps=5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(fast: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    rng = np.random.RandomState(0)
+    rows = []
+
+    B, S, H, D = (1, 512, 4, 64) if fast else (2, 1024, 8, 64)
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    flops = 4 * B * H * S * S * D  # qk^T + pv
+    t_chunked = _timeit(jax.jit(lambda a, b, c: flash_attention_xla(
+        a, b, c, causal=True)), q, k, v)
+    t_naive = _timeit(jax.jit(lambda a, b, c: jnp.swapaxes(attention_ref(
+        jnp.swapaxes(a, 1, 2), jnp.swapaxes(b, 1, 2), jnp.swapaxes(c, 1, 2),
+        causal=True), 1, 2)), q, k, v)
+    rows.append({"kernel": "flash_attention_xla", "us": t_chunked * 1e6,
+                 "derived": f"gflops={flops/t_chunked/1e9:.1f}"})
+    rows.append({"kernel": "attention_naive", "us": t_naive * 1e6,
+                 "derived": f"gflops={flops/t_naive/1e9:.1f}"})
+
+    Bs, nc, Q, nh, hd, ns = (1, 4, 64, 4, 32, 16) if fast else \
+        (2, 8, 128, 8, 64, 32)
+    x = jnp.asarray(rng.randn(Bs, nc, Q, nh, hd), jnp.float32)
+    b = jnp.asarray(rng.randn(Bs, nc, Q, ns), jnp.float32)
+    c = jnp.asarray(rng.randn(Bs, nc, Q, ns), jnp.float32)
+    dt = jnp.asarray(rng.rand(Bs, nc, Q, nh), jnp.float32) * 0.1
+    da = -jnp.asarray(rng.rand(Bs, nc, Q, nh), jnp.float32) * 0.5
+    t_ref = _timeit(jax.jit(ssd_scan_ref), x, b, c, dt, da)
+    rows.append({"kernel": "ssd_recurrence_ref", "us": t_ref * 1e6,
+                 "derived": f"tokens={Bs*nc*Q}"})
+
+    xx = jnp.asarray(rng.randn(4096, 1024), jnp.float32)
+    w = jnp.asarray(rng.rand(1024), jnp.float32)
+    t_norm = _timeit(jax.jit(rmsnorm_ref), xx, w)
+    rows.append({"kernel": "rmsnorm_ref", "us": t_norm * 1e6,
+                 "derived": f"GBps={(xx.nbytes*2)/t_norm/1e9:.1f}"})
+
+    t = np.cumsum(rng.randint(0, 1000, size=1 << 16)).astype(np.uint32)
+    tj = jnp.asarray(t)
+    t_np = _timeit(lambda a: delta_zigzag_encode(np.asarray(a).reshape(-1, 2)), t)
+    rows.append({"kernel": "delta_zigzag_numpy", "us": t_np * 1e6,
+                 "derived": f"MBps={t.nbytes/t_np/1e6:.0f}"})
+
+    with open(os.path.join(ART, "kernels.csv"), "w", newline="") as f:
+        wcsv = csv.DictWriter(f, rows[0].keys())
+        wcsv.writeheader()
+        wcsv.writerows(rows)
+    return [f"kernel,{r['kernel']},{r['us']:.1f}us,{r['derived']}"
+            for r in rows]
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

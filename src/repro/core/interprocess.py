@@ -1,0 +1,241 @@
+"""Inter-process I/O pattern recognition and compression (paper §3.2.2, §3.3).
+
+At finalization each rank holds a local CST and CFG that are *almost*
+identical across ranks: only rank-dependent offsets differ.  The inter-process
+pass
+
+  1. groups CST entries whose signatures are identical once OFFSET-role
+     values are masked,
+  2. within each group matches the k-th occurrence of every rank and checks
+     whether each offset component is linear in the rank, ``v_r = r*a + b``
+     (components of an ``IterPattern`` are checked separately, paper Fig 3c),
+  3. rewrites matching entries into one shared signature containing
+     ``RankPattern`` values, producing a single **merged CST**,
+  4. remaps every rank's CFG terminals and deduplicates identical CFGs
+     (paper Fig 3d: unique-CFGs file + CFG-index file + merged-CST file).
+
+All functions here are pure (lists in, lists out); the SPMD wrapper in
+``recorder.py`` moves data through a ``Comm``, and the benchmark drivers call
+these directly on simulated rank states.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .encoding import (IterPattern, RankPattern, decode_signature,
+                       encode_signature)
+from .sequitur import remap_grammar
+from .specs import FunctionRegistry, Role
+
+_MASK = "MASK"  # private-use sentinel replacing masked offset leaves
+
+
+# ---------------------------------------------------------------------------
+# signature masking
+# ---------------------------------------------------------------------------
+
+
+def _split_offsets(registry: FunctionRegistry, sig: bytes):
+    """Decode ``sig`` and pull out OFFSET-role values (args and, for
+    OFFSET-role returns such as lseek's, the return value).
+
+    Returns (func_id, tid, depth, masked_args, ret, offsets, ret_masked);
+    masked positions are replaced by the mask sentinel, and a masked return
+    contributes the *last* element of ``offsets``.
+    """
+    func_id, tid, depth, args, ret = decode_signature(sig)
+    spec = registry.spec(func_id)
+    off_pos = spec.offset_positions
+    offsets = [args[i] for i in off_pos if i < len(args)]
+    masked = tuple(_MASK if i in off_pos else v for i, v in enumerate(args))
+    ret_masked = (spec.ret_role == Role.OFFSET
+                  and isinstance(ret, (int, IterPattern)))
+    if ret_masked:
+        offsets.append(ret)
+    return func_id, tid, depth, masked, ret, tuple(offsets), ret_masked
+
+
+def _masked_bytes(func_id: int, tid: int, depth: int, masked: tuple, ret: Any,
+                  ret_masked: bool) -> bytes:
+    return encode_signature(func_id, tid, depth, masked,
+                            _MASK if ret_masked else ret)
+
+
+# ---------------------------------------------------------------------------
+# rank-linear fitting
+# ---------------------------------------------------------------------------
+
+
+def _fit_component(values: Sequence[int]) -> Optional[Any]:
+    """Fit ``v_r = r*a + b`` over ranks; int if constant, RankPattern if
+    linear with a != 0, None if not linear."""
+    v0 = values[0]
+    if all(v == v0 for v in values):
+        return int(v0)
+    if len(values) < 2:
+        return None
+    a = values[1] - values[0]
+    if a == 0:
+        return None
+    for r, v in enumerate(values):
+        if v != v0 + r * a:
+            return None
+    return RankPattern(a, v0)
+
+
+def _fit_offsets(per_rank: List[tuple]) -> Optional[tuple]:
+    """Fit each offset slot across ranks.  ``per_rank[r]`` is the tuple of
+    offset values of rank r for this occurrence.  Values are ints or
+    IterPattern with int components."""
+    n_slots = len(per_rank[0])
+    if any(len(v) != n_slots for v in per_rank):
+        return None
+    out = []
+    for s in range(n_slots):
+        col = [pr[s] for pr in per_rank]
+        if all(isinstance(v, int) for v in col):
+            fit = _fit_component(col)  # type: ignore[arg-type]
+            if fit is None:
+                return None
+            out.append(fit)
+        elif all(isinstance(v, IterPattern) for v in col):
+            a_fit = _fit_component([int(v.a) for v in col])  # type: ignore[union-attr]
+            b_fit = _fit_component([int(v.b) for v in col])  # type: ignore[union-attr]
+            if a_fit is None or b_fit is None:
+                return None
+            out.append(IterPattern(a_fit, b_fit))
+        else:
+            return None  # mixed kinds across ranks: no merge
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# CST merge
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MergeResult:
+    merged_entries: List[bytes]          # the merged CST, terminal order
+    remaps: List[Dict[int, int]]         # per rank: old terminal -> new
+    n_rank_patterns: int                 # how many entries used RankPattern
+
+
+def merge_csts(rank_csts: List[List[bytes]], registry: FunctionRegistry,
+               inter_patterns: bool = True) -> MergeResult:
+    """Merge per-rank CSTs into one (paper §3.3.1)."""
+    nranks = len(rank_csts)
+    # -- pass 1: decode + group by (masked signature, occurrence index) ------
+    decoded: List[List[tuple]] = []        # [rank][t] = (masked_key, parts)
+    groups: Dict[Tuple[bytes, int], Dict[int, tuple]] = {}
+    group_order: List[Tuple[bytes, int]] = []
+    for r, cst in enumerate(rank_csts):
+        occ_counter: Dict[bytes, int] = {}
+        rank_rows = []
+        for t, sig in enumerate(cst):
+            (func_id, tid, depth, masked, ret, offsets,
+             ret_masked) = _split_offsets(registry, sig)
+            mkey = _masked_bytes(func_id, tid, depth, masked, ret, ret_masked)
+            j = occ_counter.get(mkey, 0)
+            occ_counter[mkey] = j + 1
+            gkey = (mkey, j)
+            g = groups.get(gkey)
+            if g is None:
+                g = {}
+                groups[gkey] = g
+                group_order.append(gkey)
+            g[r] = (t, offsets)
+            rank_rows.append((gkey, (func_id, tid, depth, masked, ret,
+                                     offsets, ret_masked)))
+        decoded.append(rank_rows)
+
+    # -- pass 2: fit rank-linear groups --------------------------------------
+    merged_offsets: Dict[Tuple[bytes, int], tuple] = {}
+    n_rank_patterns = 0
+    if inter_patterns and nranks > 1:
+        for gkey in group_order:
+            g = groups[gkey]
+            if len(g) != nranks:
+                continue  # not present on every rank: no fit (paper: collective I/O case)
+            per_rank = [g[r][1] for r in range(nranks)]
+            if not per_rank[0]:
+                continue  # no offset args: identical signatures merge by interning
+            fit = _fit_offsets(per_rank)
+            if fit is not None:
+                merged_offsets[gkey] = fit
+                if any(isinstance(v, RankPattern) or
+                       (isinstance(v, IterPattern) and
+                        (isinstance(v.a, RankPattern) or isinstance(v.b, RankPattern)))
+                       for v in fit):
+                    n_rank_patterns += 1
+
+    # -- pass 3: build merged table + per-rank remaps ------------------------
+    table: Dict[bytes, int] = {}
+    merged_entries: List[bytes] = []
+    remaps: List[Dict[int, int]] = [dict() for _ in range(nranks)]
+
+    def intern(sig: bytes) -> int:
+        t = table.get(sig)
+        if t is None:
+            t = len(merged_entries)
+            table[sig] = t
+            merged_entries.append(sig)
+        return t
+
+    for r, rank_rows in enumerate(decoded):
+        for old_t, (gkey, parts) in enumerate(rank_rows):
+            func_id, tid, depth, masked, ret, offsets, ret_masked = parts
+            fit = merged_offsets.get(gkey)
+            use_offsets = fit if fit is not None else offsets
+            it = iter(use_offsets)
+            args = tuple(next(it) if v is _MASK else v for v in masked)
+            if ret_masked:
+                ret = next(it)
+            sig = encode_signature(func_id, tid, depth, args, ret)
+            remaps[r][old_t] = intern(sig)
+
+    return MergeResult(merged_entries=merged_entries, remaps=remaps,
+                       n_rank_patterns=n_rank_patterns)
+
+
+# ---------------------------------------------------------------------------
+# CFG remap + dedupe
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CfgResult:
+    unique_cfgs: List[bytes]
+    cfg_index: List[int]  # per rank, index into unique_cfgs
+
+
+def dedupe_cfgs(rank_cfgs: List[bytes]) -> CfgResult:
+    """Keep one copy of each distinct CFG (paper §3.3.2)."""
+    table: Dict[bytes, int] = {}
+    unique: List[bytes] = []
+    index: List[int] = []
+    for buf in rank_cfgs:
+        i = table.get(buf)
+        if i is None:
+            i = len(unique)
+            table[buf] = i
+            unique.append(buf)
+        index.append(i)
+    return CfgResult(unique_cfgs=unique, cfg_index=index)
+
+
+def finalize_ranks(rank_csts: List[List[bytes]], rank_cfgs: List[bytes],
+                   registry: FunctionRegistry, inter_patterns: bool = True
+                   ) -> Tuple[MergeResult, CfgResult]:
+    """The full root-side finalization: merge CSTs, remap CFGs, dedupe.
+
+    This is the pure core shared by the SPMD path (``Recorder.finalize``)
+    and the simulated-rank drivers in benchmarks/tests.
+    """
+    merge = merge_csts(rank_csts, registry, inter_patterns=inter_patterns)
+    remapped = [remap_grammar(cfg, merge.remaps[r])
+                for r, cfg in enumerate(rank_cfgs)]
+    cfgs = dedupe_cfgs(remapped)
+    return merge, cfgs

@@ -1,0 +1,105 @@
+"""Intra-process I/O pattern recognition (paper Section 3.2.1).
+
+Offsets of repeated calls often follow ``offset_i = i*a + b``.  Recorder
+checks, at interception time, whether the current offset extends the active
+arithmetic run for this call's *pattern key* (function, thread, handle, and
+all non-offset arguments).  If it does, the offset is encoded as the pair
+``(a, b)`` so that every call of the run shares one call signature; otherwise
+the concrete offset is stored and a new run begins.
+
+Encoding protocol (mirrored exactly by the trace reader):
+
+  i == 0           -> concrete offset ``b`` (starts a run)
+  i >= 1, matches  -> ``IterPattern(a, b)`` with ``a = off_1 - off_0``
+  mismatch         -> concrete offset, run restarts at i == 0
+
+Calls with multiple OFFSET-role arguments are tracked jointly (a shared run
+index with per-component strides), so e.g. ``(offset, whence)`` pairs or
+framework step counters compress with the same machinery.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from .encoding import IterPattern
+
+
+@dataclass
+class _RunState:
+    index: int                      # how many calls matched this run so far
+    base: Tuple[int, ...]           # offsets of call 0
+    stride: Optional[Tuple[int, ...]]  # set at call 1
+
+
+Encoded = Union[int, IterPattern]
+
+
+class IntraPatternTracker:
+    """Per-process tracker; keys must be hashable and derivable by the reader
+    from decoded records (it uses the same key function on decoded args)."""
+
+    def __init__(self, enabled: bool = True) -> None:
+        self.enabled = enabled
+        self._runs: Dict[Any, _RunState] = {}
+
+    def encode(self, key: Any, offsets: Sequence[int]) -> List[Encoded]:
+        """Encode the OFFSET-role values of one call."""
+        vals = tuple(int(v) for v in offsets)
+        if not self.enabled or not vals:
+            return list(vals)
+        run = self._runs.get(key)
+        if run is None:
+            self._runs[key] = _RunState(index=1, base=vals, stride=None)
+            return list(vals)
+        if run.stride is None:
+            stride = tuple(v - b for v, b in zip(vals, run.base))
+            run.stride = stride
+            run.index = 2
+            return [IterPattern(a, b) for a, b in zip(stride, run.base)]
+        expected = tuple(b + run.index * a for a, b in zip(run.stride, run.base))
+        if vals == expected:
+            run.index += 1
+            return [IterPattern(a, b) for a, b in zip(run.stride, run.base)]
+        # run broken: restart
+        self._runs[key] = _RunState(index=1, base=vals, stride=None)
+        return list(vals)
+
+
+class IntraPatternDecoder:
+    """Reader-side inverse of :class:`IntraPatternTracker`.
+
+    The decoder tracks, per pattern key, the occurrence index of the active
+    run and materializes concrete offsets from ``IterPattern`` values.
+    """
+
+    def __init__(self) -> None:
+        self._runs: Dict[Any, Tuple[int, Tuple]] = {}  # key -> (index, pattern sig)
+
+    def decode(self, key: Any, encoded: Sequence[Encoded]) -> List[int]:
+        if not encoded:
+            return []
+        if not any(isinstance(v, IterPattern) for v in encoded):
+            # concrete call: (re)starts a run at index 0
+            self._runs[key] = (1, None)
+            return [int(v) for v in encoded]  # type: ignore[arg-type]
+        patsig = tuple((v.a, v.b) if isinstance(v, IterPattern) else v
+                       for v in encoded)
+        idx, prev_sig = self._runs.get(key, (1, None))
+        if prev_sig is not None and prev_sig == patsig:
+            idx += 1
+        # else: this is the first encoded call of the run (index 1)
+        out: List[int] = []
+        for v in encoded:
+            if isinstance(v, IterPattern):
+                out.append(int(v.b) + idx * int(v.a))
+            else:
+                out.append(int(v))
+        self._runs[key] = (idx, patsig)
+        return out
+
+
+def pattern_key(func_id: int, thread_id: int, handle_ids: Tuple, other_args: Tuple) -> Tuple:
+    """The pattern key shared by tracker and decoder."""
+    return (func_id, thread_id, handle_ids, other_args)

@@ -1,0 +1,352 @@
+"""The Recorder runtime (paper Sections 2 and 3).
+
+One ``Recorder`` instance per process (rank).  The generated tracing
+wrappers (``wrappers.py``) call :meth:`Recorder.record` from their epilogue;
+the record path performs, in order:
+
+  * argument normalization by role (paths, unified handle ids, buffer
+    lengths -- paper §2.2.1/§3.2.2),
+  * runtime filtering by path prefix and layer (paper §2.1.1),
+  * intra-process I/O pattern encoding of OFFSET-role args (paper §3.2.1),
+  * CST interning of the call signature (paper §3.1),
+  * Sequitur grammar append (paper §3.1),
+  * timestamp buffering (paper §2.2.1).
+
+``finalize`` runs the inter-process stage (paper §3.2.2/§3.3) through a
+``Comm`` and writes the five trace files (unique CFGs, CFG index, merged
+CST, timestamps, metadata).
+"""
+
+from __future__ import annotations
+
+import getpass
+import os
+import socket
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+from .comm import Comm, SoloComm
+from .cst import CST
+from .encoding import Handle
+from .interprocess import finalize_ranks
+from .patterns import IntraPatternTracker
+from .sequitur import Sequitur
+from .specs import REGISTRY, FunctionRegistry, Role
+from .timestamps import TimestampBuffer, compress_timestamps
+from . import trace_format
+
+
+@dataclass
+class RecorderConfig:
+    trace_dir: Optional[str] = None
+    layers: Optional[Set[str]] = None        # None = all layers enabled
+    path_prefixes: Optional[List[str]] = None  # None = record everything
+    intra_patterns: bool = True              # paper §3.2.1 toggle (Fig 4)
+    inter_patterns: bool = True              # paper §3.2.2 toggle (Fig 5)
+    timestamps: bool = True
+    store_buffers: bool = False              # record buffer lengths only
+
+    @classmethod
+    def from_env(cls, **overrides) -> "RecorderConfig":
+        """Environment-variable control, as in the original tool."""
+        cfg = cls(**overrides)
+        layers = os.environ.get("RECORDER_LAYERS")
+        if layers:
+            cfg.layers = set(layers.split(","))
+        prefixes = os.environ.get("RECORDER_PATH_PREFIXES")
+        if prefixes:
+            cfg.path_prefixes = prefixes.split(",")
+        if os.environ.get("RECORDER_NO_INTRA_PATTERNS"):
+            cfg.intra_patterns = False
+        if os.environ.get("RECORDER_NO_INTER_PATTERNS"):
+            cfg.inter_patterns = False
+        return cfg
+
+
+@dataclass
+class RecorderStats:
+    n_records: int = 0
+    n_skipped: int = 0
+    cst_entries: int = 0
+    cfg_bytes: int = 0
+    cst_bytes: int = 0
+    ts_bytes: int = 0
+
+
+class _ThreadState(threading.local):
+    def __init__(self) -> None:
+        self.depth = 0
+
+
+class Recorder:
+    def __init__(self, rank: int = 0, config: Optional[RecorderConfig] = None,
+                 registry: FunctionRegistry = REGISTRY) -> None:
+        self.rank = rank
+        self.config = config or RecorderConfig()
+        self.registry = registry
+        self.cst = CST()
+        self.grammar = Sequitur()
+        self.intra = IntraPatternTracker(enabled=self.config.intra_patterns)
+        self.timestamps = TimestampBuffer()
+        self._lock = threading.Lock()
+        self._tls = _ThreadState()
+        self._thread_ids: Dict[int, int] = {}
+        self._handles: Dict[Any, Handle] = {}
+        self._untracked: Set[Any] = set()
+        self._next_handle = 0
+        self._free_handles: Set[int] = set()  # reuse closed ids (fd-like)
+        self._t0 = time.perf_counter()
+        self.n_records = 0
+        self.n_skipped = 0
+        self._finalized = False
+
+    # -- wrapper support ------------------------------------------------------
+
+    def now(self) -> int:
+        """Microsecond ticks since recorder start (4-byte timestamps)."""
+        return int((time.perf_counter() - self._t0) * 1e6)
+
+    def enter(self) -> int:
+        d = self._tls.depth
+        self._tls.depth = d + 1
+        return d
+
+    def exit(self) -> None:
+        self._tls.depth -= 1
+
+    def layer_enabled(self, layer: str) -> bool:
+        return self.config.layers is None or layer in self.config.layers
+
+    # -- the record path ------------------------------------------------------
+
+    def _alloc_handle(self) -> Handle:
+        """Smallest-free-id allocation: re-opening after close yields the
+        SAME unified id (as POSIX fds do), so periodic re-writes of the same
+        file (rolling checkpoints) produce identical call signatures."""
+        if self._free_handles:
+            hid = min(self._free_handles)
+            self._free_handles.discard(hid)
+            return Handle(hid)
+        h = Handle(self._next_handle)
+        self._next_handle += 1
+        return h
+
+    def _thread_index(self, tid: int) -> int:
+        idx = self._thread_ids.get(tid)
+        if idx is None:
+            idx = len(self._thread_ids)
+            self._thread_ids[tid] = idx
+        return idx
+
+    def record(self, func_id: int, raw_args: tuple, ret: Any, depth: int,
+               t0: int, t1: int) -> None:
+        spec = self.registry.spec(func_id)
+        with self._lock:
+            tidx = self._thread_index(threading.get_ident())
+            norm: List[Any] = []
+            offsets: List[int] = []
+            offset_slots: List[int] = []
+            handle_ids: List[int] = []
+            keyparts: List[Any] = []
+            prefixes = self.config.path_prefixes
+            for i, arg in enumerate(raw_args):
+                role = spec.args[i].role if i < len(spec.args) else Role.VAL
+                if role == Role.PATH:
+                    p = str(arg)
+                    if prefixes is not None and not any(
+                            p.startswith(x) for x in prefixes):
+                        # filtered out: skip the record entirely; if this call
+                        # creates a handle, remember it as untracked
+                        if spec.ret_role == Role.HANDLE and ret is not None:
+                            self._untracked.add(ret)
+                        self.n_skipped += 1
+                        return
+                    norm.append(p)
+                    keyparts.append(p)
+                elif role == Role.HANDLE:
+                    if arg in self._untracked:
+                        self.n_skipped += 1
+                        return
+                    h = self._handles.get(arg)
+                    if h is None:
+                        # handle from before tracing started: late-register
+                        h = self._alloc_handle()
+                        self._handles[arg] = h
+                    norm.append(h)
+                    handle_ids.append(h.id)
+                elif role == Role.OFFSET:
+                    offsets.append(int(arg))
+                    offset_slots.append(len(norm))
+                    norm.append(None)  # placeholder, filled below
+                elif role == Role.BUF:
+                    v = len(arg) if hasattr(arg, "__len__") else (
+                        int(arg) if isinstance(arg, int) else None)
+                    norm.append(v)
+                    keyparts.append(v)
+                else:  # SIZE / VAL
+                    norm.append(arg)
+                    keyparts.append(arg)
+
+            # normalize the return value
+            is_err = isinstance(ret, tuple) and len(ret) == 2 and ret[0] == "err"
+            if spec.ret_role == Role.HANDLE and ret is not None and not is_err:
+                # layered opens (shard_open -> posix.open) return the same
+                # raw handle: they share one unified id (paper Section 3.2.2)
+                h = self._handles.get(ret)
+                if h is None:
+                    h = self._alloc_handle()
+                    self._handles[ret] = h
+                nret: Any = h
+            elif spec.ret_role == Role.BUF and hasattr(ret, "__len__"):
+                nret = len(ret)
+            else:
+                nret = ret
+            if isinstance(nret, Handle):
+                key_ret: Any = ("h", nret.id)
+            else:
+                key_ret = nret
+
+            # OFFSET-role returns (e.g. lseek's resulting offset) join the
+            # pattern run; they cannot be part of the pattern key then.
+            ret_is_offset = (spec.ret_role == Role.OFFSET
+                             and isinstance(nret, int) and not is_err)
+
+            # intra-process I/O pattern encoding (paper §3.2.1)
+            if offsets or ret_is_offset:
+                key = (func_id, tidx, tuple(handle_ids), tuple(keyparts),
+                       None if ret_is_offset else key_ret)
+                vals = offsets + ([nret] if ret_is_offset else [])
+                encoded = self.intra.encode(key, vals)
+                for slot, val in zip(offset_slots, encoded):
+                    norm[slot] = val
+                if ret_is_offset:
+                    nret = encoded[-1]
+
+            sig = trace_format.make_signature(func_id, tidx, depth, tuple(norm), nret)
+            terminal = self.cst.intern(sig)
+            self.grammar.push(terminal)
+            if self.config.timestamps:
+                self.timestamps.append(t0, t1)
+            self.n_records += 1
+
+    def forget_handle(self, raw: Any) -> None:
+        """Called by close-style wrappers after recording."""
+        with self._lock:
+            h = self._handles.pop(raw, None)
+            if h is not None:
+                self._free_handles.add(h.id)
+            self._untracked.discard(raw)
+
+    # -- finalization (paper §3.3) --------------------------------------------
+
+    def local_state(self) -> Tuple[List[bytes], bytes, bytes]:
+        """(CST entries, serialized CFG, compressed timestamps)."""
+        ts = compress_timestamps(self.timestamps.as_array())
+        return self.cst.entries, self.grammar.serialize(), ts
+
+    def finalize(self, comm: Optional[Comm] = None,
+                 trace_dir: Optional[str] = None) -> Optional[RecorderStats]:
+        """Run the inter-process stage and write the trace (root returns
+        stats; other ranks return None)."""
+        if self._finalized:
+            raise RuntimeError("recorder already finalized")
+        self._finalized = True
+        comm = comm or SoloComm()
+        trace_dir = trace_dir or self.config.trace_dir
+        entries, cfg, ts = self.local_state()
+        gathered = comm.gather((entries, cfg, ts))
+        if comm.rank != 0:
+            comm.barrier()
+            return None
+        rank_csts = [g[0] for g in gathered]
+        rank_cfgs = [g[1] for g in gathered]
+        rank_ts = [g[2] for g in gathered]
+        merge, cfgs = finalize_ranks(
+            rank_csts, rank_cfgs, self.registry,
+            inter_patterns=self.config.inter_patterns)
+        stats = RecorderStats(
+            n_records=self.n_records,
+            n_skipped=self.n_skipped,
+            cst_entries=len(merge.merged_entries),
+            cfg_bytes=sum(len(c) for c in cfgs.unique_cfgs),
+            cst_bytes=sum(len(e) + 2 for e in merge.merged_entries),
+            ts_bytes=sum(len(t) for t in rank_ts),
+        )
+        if trace_dir:
+            trace_format.write_trace(
+                trace_dir,
+                registry=self.registry,
+                merged_cst=merge.merged_entries,
+                unique_cfgs=cfgs.unique_cfgs,
+                cfg_index=cfgs.cfg_index,
+                rank_timestamps=rank_ts,
+                meta_extra=self._metadata(comm.size),
+            )
+        comm.barrier()
+        return stats
+
+    def _metadata(self, nranks: int) -> Dict[str, Any]:
+        try:
+            user = getpass.getuser()
+        except Exception:  # pragma: no cover
+            user = "unknown"
+        return {
+            "nranks": nranks,
+            "app": os.path.basename(sys.argv[0]) if sys.argv else "unknown",
+            "user": user,
+            "host": socket.gethostname(),
+            "pid": os.getpid(),
+            "layers": sorted(self.config.layers) if self.config.layers else "all",
+            "intra_patterns": self.config.intra_patterns,
+            "inter_patterns": self.config.inter_patterns,
+            "tick_unit": "us",
+            "tick_wrap": 2 ** 32,
+        }
+
+
+# ---------------------------------------------------------------------------
+# the active-recorder slot used by generated wrappers (LD_PRELOAD analogue)
+# ---------------------------------------------------------------------------
+
+_active: List[Optional[Recorder]] = [None]
+
+
+def attach(rec: Recorder) -> None:
+    _active[0] = rec
+
+
+def detach() -> None:
+    _active[0] = None
+
+
+def active() -> Optional[Recorder]:
+    return _active[0]
+
+
+class session:
+    """Context manager: trace a region and finalize on exit.
+
+    >>> with session(RecorderConfig(trace_dir="/tmp/t")) as rec:
+    ...     posix.open(...)  # traced
+    """
+
+    def __init__(self, config: Optional[RecorderConfig] = None,
+                 comm: Optional[Comm] = None, rank: int = 0):
+        self.config = config
+        self.comm = comm
+        self.rank = rank
+        self.recorder: Optional[Recorder] = None
+        self.stats: Optional[RecorderStats] = None
+
+    def __enter__(self) -> Recorder:
+        self.recorder = Recorder(rank=self.rank, config=self.config)
+        attach(self.recorder)
+        return self.recorder
+
+    def __exit__(self, *exc) -> None:
+        detach()
+        if self.recorder is not None and exc[0] is None:
+            self.stats = self.recorder.finalize(self.comm)

@@ -1,0 +1,387 @@
+"""Sequitur grammar induction with run-length exponents.
+
+The paper (Section 3.1) compresses the per-process stream of call-signature
+terminals into a context-free grammar using Sequitur [Nevill-Manning &
+Witten].  Plain Sequitur represents ``a^n`` as an O(log n) tower of binary
+rules; the paper (following Pilgrim [19, 20]) shows rules of the form
+``S -> A^m``, i.e. symbols carry repetition exponents.  We implement
+exponent-carrying Sequitur:
+
+  * every symbol node is ``(sym, exp)``; appending a terminal equal to the
+    tail symbol increments the tail's exponent (streaming RLE),
+  * digrams are keyed on both symbols *and* exponents, so a repeated loop
+    body ``(a,n)(b,1)`` forms one rule regardless of ``n``,
+  * adjacent equal symbols are always merged, which also removes the classic
+    overlapping-digram corner case of textbook Sequitur.
+
+The two Sequitur invariants are maintained:
+  digram uniqueness -- no digram appears more than once in the grammar,
+  rule utility      -- every rule is referenced more than once (a rule whose
+                       reference count drops to one occurrence with exponent
+                       one is inlined).
+
+Complexity is amortized O(1) per appended terminal.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from .encoding import pack_uvarints, read_uvarint, write_uvarint
+
+Key = Tuple[int, int, int]  # (is_rule, sym_or_rule_id, exp)
+
+
+class Symbol:
+    __slots__ = ("term", "rule", "exp", "prev", "next")
+
+    def __init__(self, term: Optional[int], rule: Optional["Rule"], exp: int):
+        self.term = term          # terminal id (>= 0) or None
+        self.rule = rule          # Rule reference or None
+        self.exp = exp
+        self.prev: Optional[Symbol] = None
+        self.next: Optional[Symbol] = None
+
+    @property
+    def is_guard(self) -> bool:
+        return self.exp == 0
+
+    def key(self) -> Key:
+        if self.rule is not None:
+            return (1, self.rule.id, self.exp)
+        return (0, self.term, self.exp)  # type: ignore[return-value]
+
+    def same_sym(self, other: "Symbol") -> bool:
+        if self.rule is not None:
+            return other.rule is self.rule
+        return other.rule is None and other.term == self.term
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        if self.is_guard:
+            return f"<guard R{self.rule.id}>"
+        base = f"R{self.rule.id}" if self.rule is not None else f"t{self.term}"
+        return f"{base}^{self.exp}"
+
+
+class Rule:
+    __slots__ = ("id", "guard", "users")
+
+    def __init__(self, rid: int):
+        self.id = rid
+        g = Symbol(None, self, 0)  # guard: exp 0, rule back-reference
+        g.prev = g
+        g.next = g
+        self.guard = g
+        # symbol nodes elsewhere in the grammar that reference this rule
+        self.users: set = set()
+
+    def body(self) -> Iterator[Symbol]:
+        n = self.guard.next
+        while n is not self.guard:
+            yield n
+            n = n.next
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"R{self.id} -> " + " ".join(repr(s) for s in self.body())
+
+
+class Sequitur:
+    """Online exponent-Sequitur over integer terminals."""
+
+    def __init__(self) -> None:
+        self._next_rule_id = 0
+        self.start = self._new_rule()
+        self.index: Dict[Tuple[Key, Key], Symbol] = {}
+        self.n_pushed = 0  # total terminals (with multiplicity)
+
+    # -- public API ---------------------------------------------------------
+
+    def push(self, terminal: int, count: int = 1) -> None:
+        """Append ``terminal`` repeated ``count`` times to the sequence."""
+        if count <= 0:
+            raise ValueError("count must be positive")
+        self.n_pushed += count
+        g = self.start.guard
+        tail = g.prev
+        if not tail.is_guard and tail.rule is None and tail.term == terminal:
+            # streaming RLE: bump the tail's exponent in place
+            self._unindex_digram(tail.prev)
+            tail.exp += count
+            self._scan_digram(tail.prev)
+        else:
+            node = Symbol(terminal, None, count)
+            self._splice_after(tail, node)
+            self._scan_digram(node.prev)
+
+    def rules(self) -> List[Rule]:
+        seen: Dict[int, Rule] = {}
+        stack = [self.start]
+        while stack:
+            r = stack.pop()
+            if r.id in seen:
+                continue
+            seen[r.id] = r
+            for s in r.body():
+                if s.rule is not None:
+                    stack.append(s.rule)
+        return [seen[k] for k in sorted(seen)]
+
+    def expand(self) -> List[int]:
+        """Reconstruct the original terminal stream (lossless check)."""
+        out: List[int] = []
+
+        def walk(rule: Rule) -> None:
+            for s in rule.body():
+                for _ in range(s.exp):
+                    if s.rule is not None:
+                        walk(s.rule)
+                    else:
+                        out.append(s.term)  # type: ignore[arg-type]
+
+        walk(self.start)
+        return out
+
+    # -- serialized grammar ---------------------------------------------------
+
+    def serialize(self) -> bytes:
+        """Compact byte form.  Rules are renumbered densely; rule references
+        are encoded as ``2*local_index + 1``, terminals as ``2*terminal``.
+
+        Layout: n_rules, then per rule: n_items, (code, exp)*  (all uvarints).
+        Rule 0 is the start rule.
+        """
+        rules = self.rules()
+        local = {r.id: i for i, r in enumerate(rules)}
+        vals: List[int] = [len(rules)]
+        for r in rules:
+            items = list(r.body())
+            vals.append(len(items))
+            for s in items:
+                if s.rule is not None:
+                    vals.append(2 * local[s.rule.id] + 1)
+                else:
+                    vals.append(2 * s.term)  # type: ignore[operator]
+                vals.append(s.exp)
+        return pack_uvarints(vals)
+
+    # -- internals ----------------------------------------------------------
+
+    def _new_rule(self) -> Rule:
+        r = Rule(self._next_rule_id)
+        self._next_rule_id += 1
+        return r
+
+    @staticmethod
+    def _splice_after(left: Symbol, node: Symbol) -> None:
+        right = left.next
+        node.prev = left
+        node.next = right
+        left.next = node
+        right.prev = node
+        if node.rule is not None:
+            node.rule.users.add(node)
+
+    def _unlink(self, node: Symbol) -> None:
+        node.prev.next = node.next
+        node.next.prev = node.prev
+        if node.rule is not None:
+            node.rule.users.discard(node)
+
+    # digram index maintenance -------------------------------------------------
+
+    def _digram_key(self, left: Symbol) -> Optional[Tuple[Key, Key]]:
+        right = left.next
+        if left.is_guard or right.is_guard:
+            return None
+        return (left.key(), right.key())
+
+    def _unindex_digram(self, left: Symbol) -> None:
+        key = self._digram_key(left)
+        if key is not None and self.index.get(key) is left:
+            del self.index[key]
+
+    def _scan_digram(self, left: Symbol) -> None:
+        """Register the digram starting at ``left``; on a duplicate, rewrite
+        per the digram-uniqueness invariant."""
+        key = self._digram_key(left)
+        if key is None:
+            return
+        match = self.index.get(key)
+        if match is None:
+            self.index[key] = left
+            return
+        if match is left or match.next is left or left.next is match:
+            # same occurrence, or occurrences sharing a node (cannot rewrite)
+            return
+        self._handle_match(left, match)
+
+    def _handle_match(self, new: Symbol, match: Symbol) -> None:
+        # If the matched occurrence is the full body of some rule, reuse it.
+        if match.prev.is_guard and match.next.next is match.prev:
+            rule = match.prev.rule
+            self._substitute(new, rule)
+        else:
+            rule = self._new_rule()
+            g = rule.guard
+            a = Symbol(match.term, match.rule, match.exp)
+            b = Symbol(match.next.term, match.next.rule, match.next.exp)
+            self._splice_after(g, a)
+            self._splice_after(a, b)
+            self.index[(a.key(), b.key())] = a
+            # rewrite both occurrences (match first so its digrams stay valid)
+            self._substitute(match, rule)
+            self._substitute(new, rule)
+        # rule utility: inline a rule down to a single exp-1 reference
+        self._check_utility(rule)
+
+    def _substitute(self, left: Symbol, rule: Rule) -> None:
+        """Replace digram (left, left.next) by one reference to ``rule``."""
+        right = left.next
+        prev = left.prev
+        nxt = right.next
+        self._unindex_digram(prev)
+        self._unindex_digram(left)
+        self._unindex_digram(right)
+        used = [s.rule for s in (left, right) if s.rule is not None]
+        self._unlink(left)
+        self._unlink(right)
+        node = Symbol(None, rule, 1)
+        self._splice_after(prev, node)
+        node = self._merge_adjacent(node)
+        self._scan_digram(node.prev)
+        self._scan_digram(node)
+        for r in used:
+            self._check_utility(r)
+
+    def _merge_adjacent(self, node: Symbol) -> Symbol:
+        """Merge ``node`` with equal-symbol neighbours (RLE invariant)."""
+        prev = node.prev
+        if not prev.is_guard and prev.same_sym(node):
+            self._unindex_digram(prev.prev)
+            self._unindex_digram(prev)
+            self._unindex_digram(node)
+            prev.exp += node.exp
+            self._unlink(node)
+            node = prev
+        nxt = node.next
+        if not nxt.is_guard and nxt.same_sym(node):
+            self._unindex_digram(node.prev)
+            self._unindex_digram(node)
+            self._unindex_digram(nxt)
+            node.exp += nxt.exp
+            self._unlink(nxt)
+        return node
+
+    def _check_utility(self, rule: Rule) -> None:
+        if rule is self.start:
+            return
+        if len(rule.users) != 1:
+            return
+        (user,) = tuple(rule.users)
+        if user.exp != 1:
+            return  # still useful: one reference but repeated
+        # inline: replace `user` with the rule body
+        prev = user.prev
+        nxt = user.next
+        self._unindex_digram(prev)
+        self._unindex_digram(user)
+        self._unlink(user)
+        body = list(rule.body())
+        # detach body symbols from the dying rule and splice them in
+        at = prev
+        for s in body:
+            # unindex body digrams keyed at the old location
+            self._unindex_digram(s)
+            if s.rule is not None:
+                s.rule.users.discard(s)
+        for s in body:
+            node = Symbol(s.term, s.rule, s.exp)
+            self._splice_after(at, node)
+            at = node
+        # re-merge at the seams and rescan digrams across the spliced range
+        first = prev.next
+        node = self._merge_adjacent(first)
+        # walk to the end of the spliced region, merging/rescanning
+        cur = node
+        while cur is not nxt and not cur.is_guard:
+            cur = self._merge_adjacent(cur)
+            self._scan_digram(cur.prev)
+            cur = cur.next
+        if not nxt.is_guard or True:
+            self._scan_digram(nxt.prev)
+
+
+# ---------------------------------------------------------------------------
+# serialized-grammar helpers (shared by inter-process merge and the reader)
+# ---------------------------------------------------------------------------
+
+
+def parse_grammar(buf: bytes) -> List[List[Tuple[int, int]]]:
+    """Parse ``Sequitur.serialize`` output into rule lists of (code, exp)."""
+    pos = 0
+    n_rules, pos = read_uvarint(buf, pos)
+    rules: List[List[Tuple[int, int]]] = []
+    for _ in range(n_rules):
+        n_items, pos = read_uvarint(buf, pos)
+        items: List[Tuple[int, int]] = []
+        for _ in range(n_items):
+            code, pos = read_uvarint(buf, pos)
+            exp, pos = read_uvarint(buf, pos)
+            items.append((code, exp))
+        rules.append(items)
+    return rules
+
+
+def serialize_grammar(rules: List[List[Tuple[int, int]]]) -> bytes:
+    vals: List[int] = [len(rules)]
+    for items in rules:
+        vals.append(len(items))
+        for code, exp in items:
+            vals.append(code)
+            vals.append(exp)
+    return pack_uvarints(vals)
+
+
+def remap_grammar(buf: bytes, terminal_map: Dict[int, int]) -> bytes:
+    """Rewrite terminal ids in a serialized grammar (inter-process CST merge,
+    paper Section 3.3.1)."""
+    rules = parse_grammar(buf)
+    out = [
+        [(code if code & 1 else 2 * terminal_map[code >> 1], exp)
+         for code, exp in items]
+        for items in rules
+    ]
+    return serialize_grammar(out)
+
+
+def expand_grammar(rules: List[List[Tuple[int, int]]]) -> Iterator[int]:
+    """Yield the terminal stream of a parsed grammar (rule 0 is start).
+
+    Iterative expansion (no recursion limit); the stream is yielded lazily so
+    readers can stop early.  Stack frames are [items, item_idx, reps_left].
+    """
+    stack: List[List] = [[rules[0], 0, 0]]
+    while stack:
+        frame = stack[-1]
+        items = frame[0]
+        if frame[2] == 0:
+            if frame[1] >= len(items):
+                stack.pop()
+                continue
+            frame[2] = items[frame[1]][1]
+            frame[1] += 1
+            continue
+        code = items[frame[1] - 1][0]
+        frame[2] -= 1
+        if code & 1:
+            stack.append([rules[code >> 1], 0, 0])
+        else:
+            yield code >> 1
+
+
+def grammar_stats(rules: List[List[Tuple[int, int]]]) -> Dict[str, int]:
+    return {
+        "n_rules": len(rules),
+        "n_symbols": sum(len(r) for r in rules),
+        "n_terminals_expanded": None,  # expensive; computed on demand
+    }

@@ -1,0 +1,85 @@
+"""Timestamp storage (paper §2.2.1).
+
+Recorder stores entry and exit times of every call as 4-byte deltas relative
+to the application's start, buffered in memory and compressed with zlib at
+finalization.  We store uint32 *microsecond* ticks since recorder init
+(wraps at ~71.6 minutes -- fine for the traced phases; the wrap policy is
+recorded in metadata).  The compression pipeline is
+
+    ticks -> first-order delta -> zigzag -> little-endian u32 -> zlib
+
+The delta+zigzag stage is the arithmetic hot loop; ``repro.kernels.
+delta_encode`` provides the TPU (Pallas) version of it, validated against
+the numpy path used here.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import List, Tuple
+
+import numpy as np
+
+
+class TimestampBuffer:
+    """Append-only (entry, exit) tick buffer for one rank."""
+
+    def __init__(self) -> None:
+        self._chunks: List[np.ndarray] = []
+        self._cur = np.empty((4096, 2), dtype=np.uint32)
+        self._n = 0
+
+    def append(self, t_entry: int, t_exit: int) -> None:
+        if self._n == len(self._cur):
+            self._chunks.append(self._cur)
+            self._cur = np.empty((4096, 2), dtype=np.uint32)
+            self._n = 0
+        self._cur[self._n, 0] = t_entry & 0xFFFFFFFF
+        self._cur[self._n, 1] = t_exit & 0xFFFFFFFF
+        self._n += 1
+
+    def __len__(self) -> int:
+        return sum(len(c) for c in self._chunks) + self._n
+
+    def as_array(self) -> np.ndarray:
+        parts = self._chunks + [self._cur[: self._n]]
+        return np.concatenate(parts, axis=0) if parts else np.empty((0, 2), np.uint32)
+
+
+def delta_zigzag_encode(ticks: np.ndarray) -> np.ndarray:
+    """Flattened interleaved (entry, exit) stream -> delta -> zigzag u32.
+
+    Deltas are wrapped into signed 32-bit range (mod 2^32) BEFORE zigzag:
+    ticks are u32, so a raw delta can need 33 bits; the wrap keeps the
+    encoding exactly 4 bytes and the mod-2^32 cumsum decode is lossless.
+    (This also matches the Pallas kernel's int32 arithmetic bit-for-bit.)
+    """
+    flat = ticks.reshape(-1).astype(np.int64)
+    if flat.size == 0:
+        return np.empty((0,), np.uint32)
+    deltas = np.empty_like(flat)
+    deltas[0] = flat[0]
+    # timestamps are monotone per column but interleaved entry/exit deltas
+    # may be negative -> zigzag
+    deltas[1:] = flat[1:] - flat[:-1]
+    deltas = ((deltas + (1 << 31)) % (1 << 32)) - (1 << 31)
+    zz = (deltas << 1) ^ (deltas >> 63)
+    return (zz & 0xFFFFFFFF).astype(np.uint32)
+
+
+def delta_zigzag_decode(zz: np.ndarray) -> np.ndarray:
+    u = zz.astype(np.int64)
+    deltas = (u >> 1) ^ -(u & 1)
+    flat = np.cumsum(deltas)          # mod-2^32 recovery via the u32 cast
+    return flat.astype(np.uint32).reshape(-1, 2)
+
+
+def compress_timestamps(ticks: np.ndarray) -> bytes:
+    zz = delta_zigzag_encode(ticks)
+    return zlib.compress(zz.astype("<u4").tobytes(), level=6)
+
+
+def decompress_timestamps(buf: bytes) -> np.ndarray:
+    raw = zlib.decompress(buf)
+    zz = np.frombuffer(raw, dtype="<u4").astype(np.uint32)
+    return delta_zigzag_decode(zz)

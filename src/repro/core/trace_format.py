@@ -1,0 +1,124 @@
+"""On-disk trace format (paper Fig 3(d)).
+
+A trace directory holds the five files produced by the inter-process
+compression stage:
+
+  unique_cfgs.bin   one copy of each distinct per-rank grammar
+  cfg_index.bin     for each rank, which unique CFG it uses
+  merged_cst.bin    the merged call-signature table
+  timestamps.bin    per-rank zlib blocks of delta+zigzag u32 ticks
+  metadata.json     function table, options, app info, block offsets
+
+`make_signature` is re-exported here so the record path and the readers share
+one definition site for the signature layout.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from .encoding import (encode_signature, pack_uvarints, read_uvarint,
+                       unpack_uvarints, write_uvarint)
+from .specs import FunctionRegistry
+
+FORMAT_VERSION = 3  # "Recorder 3" -- the paper's major revision
+
+make_signature = encode_signature
+
+
+def _write_blob_list(path: str, blobs: List[bytes]) -> None:
+    out = bytearray()
+    write_uvarint(out, len(blobs))
+    for b in blobs:
+        write_uvarint(out, len(b))
+        out.extend(b)
+    with open(path, "wb") as f:
+        f.write(bytes(out))
+
+
+def _read_blob_list(path: str) -> List[bytes]:
+    with open(path, "rb") as f:
+        buf = f.read()
+    pos = 0
+    n, pos = read_uvarint(buf, pos)
+    blobs = []
+    for _ in range(n):
+        ln, pos = read_uvarint(buf, pos)
+        blobs.append(buf[pos : pos + ln])
+        pos += ln
+    return blobs
+
+
+def write_trace(trace_dir: str, *, registry: FunctionRegistry,
+                merged_cst: List[bytes], unique_cfgs: List[bytes],
+                cfg_index: List[int], rank_timestamps: List[bytes],
+                meta_extra: Optional[Dict[str, Any]] = None) -> Dict[str, int]:
+    """Write the trace directory; returns per-file sizes in bytes."""
+    os.makedirs(trace_dir, exist_ok=True)
+    _write_blob_list(os.path.join(trace_dir, "merged_cst.bin"), merged_cst)
+    _write_blob_list(os.path.join(trace_dir, "unique_cfgs.bin"), unique_cfgs)
+    with open(os.path.join(trace_dir, "cfg_index.bin"), "wb") as f:
+        f.write(pack_uvarints(cfg_index))
+    ts_offsets = []
+    off = 0
+    with open(os.path.join(trace_dir, "timestamps.bin"), "wb") as f:
+        for blob in rank_timestamps:
+            ts_offsets.append([off, len(blob)])
+            f.write(blob)
+            off += len(blob)
+    meta = {
+        "format_version": FORMAT_VERSION,
+        "functions": {str(i): {
+            "name": s.name,
+            "layer": s.layer,
+            "arg_names": [a.name for a in s.args],
+            "arg_roles": [a.role.value for a in s.args],
+            "ret_role": s.ret_role.value,
+        } for i, s in ((i, registry.spec(i)) for i in range(len(registry)))},
+        "ts_offsets": ts_offsets,
+        "nranks": len(cfg_index),
+    }
+    if meta_extra:
+        meta.update(meta_extra)
+    with open(os.path.join(trace_dir, "metadata.json"), "w") as f:
+        json.dump(meta, f)
+    sizes = {}
+    for name in ("merged_cst.bin", "unique_cfgs.bin", "cfg_index.bin",
+                 "timestamps.bin", "metadata.json"):
+        sizes[name] = os.path.getsize(os.path.join(trace_dir, name))
+    return sizes
+
+
+def read_trace_files(trace_dir: str) -> Dict[str, Any]:
+    with open(os.path.join(trace_dir, "metadata.json")) as f:
+        meta = json.load(f)
+    merged_cst = _read_blob_list(os.path.join(trace_dir, "merged_cst.bin"))
+    unique_cfgs = _read_blob_list(os.path.join(trace_dir, "unique_cfgs.bin"))
+    with open(os.path.join(trace_dir, "cfg_index.bin"), "rb") as f:
+        cfg_index = unpack_uvarints(f.read())
+    with open(os.path.join(trace_dir, "timestamps.bin"), "rb") as f:
+        ts_raw = f.read()
+    rank_ts = [ts_raw[o : o + n] for o, n in meta["ts_offsets"]]
+    return {
+        "meta": meta,
+        "merged_cst": merged_cst,
+        "unique_cfgs": unique_cfgs,
+        "cfg_index": cfg_index,
+        "rank_timestamps": rank_ts,
+    }
+
+
+def trace_size_report(trace_dir: str) -> Dict[str, int]:
+    """Per-file sizes; 'pattern_files' = CFG+CST (what §5.1/§5.2 report),
+    'total' = everything (§5.3)."""
+    sizes = {}
+    for name in ("merged_cst.bin", "unique_cfgs.bin", "cfg_index.bin",
+                 "timestamps.bin", "metadata.json"):
+        p = os.path.join(trace_dir, name)
+        sizes[name] = os.path.getsize(p) if os.path.exists(p) else 0
+    sizes["pattern_files"] = sizes["merged_cst.bin"] + sizes["unique_cfgs.bin"]
+    sizes["total"] = sum(v for k, v in sizes.items()
+                         if k not in ("pattern_files", "total"))
+    return sizes

@@ -1,0 +1,5 @@
+from .sharding import (axis_size, current_mesh_axes, logical_shard,
+                       mesh_context, param_sharding_rules, shard)
+
+__all__ = ["shard", "logical_shard", "mesh_context", "current_mesh_axes",
+           "axis_size", "param_sharding_rules"]

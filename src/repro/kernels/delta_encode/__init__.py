@@ -1,0 +1,3 @@
+from .ops import delta_zigzag
+
+__all__ = ["delta_zigzag"]

@@ -1,0 +1,13 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .delta_encode import delta_zigzag_pallas
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def delta_zigzag(ticks, *, block: int = 4096, interpret: bool = False):
+    """Flat u32 ticks -> zigzag u32 deltas (matches core.timestamps)."""
+    return delta_zigzag_pallas(ticks, block=block, interpret=interpret)

@@ -1,0 +1,115 @@
+"""Flash attention Pallas kernel (TPU target).
+
+Layout: q (B, H, Sq, D), k/v (B, KVH, Skv, D) -> out (B, H, Sq, D).
+
+Grid = (B*H, nq, nk); the kv axis is the minor (sequential) grid dim, so
+VMEM scratch (acc, m, l) carries the online-softmax state across kv blocks
+of one q block.  Block shapes are MXU-aligned: q/out tiles (qc, D), k/v
+tiles (kc, D) with qc/kc multiples of 128 in production (any divisor works
+in interpret mode).  GQA is expressed in the k/v index_map (h -> h //
+group); causal and sliding-window masks use block-local iota offset by the
+block coordinates.  VMEM working set per step:
+qc*D + 2*kc*D + qc*D (acc) + O(qc)  floats -- e.g. qc=kc=128, D=128 bf16
+inputs + f32 acc = ~200 KiB, comfortably inside the ~16 MiB VMEM budget,
+leaving room for double-buffered DMA of the next k/v tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int, qc: int, kc: int,
+                 nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (qc, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (kc, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (kc, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    k_pos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = jnp.ones((qc, kc), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           q_block: int = 128, kv_block: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, H, Sq, D); k, v (B, KVH, Skv, D) with H % KVH == 0."""
+    B, H, Sq, D = q.shape
+    _, KVH, Skv, _ = k.shape
+    if H % KVH:
+        raise ValueError("H must be a multiple of KVH")
+    group = H // KVH
+    qc = min(q_block, Sq)
+    while Sq % qc:
+        qc -= 1
+    kc = min(kv_block, Skv)
+    while Skv % kc:
+        kc -= 1
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                               window=window, qc=qc, kc=kc, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qc, D),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, kc, D),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // group,
+                                             ki, 0)),
+            pl.BlockSpec((1, 1, kc, D),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // group,
+                                             ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qc, D),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, D), jnp.float32),   # acc
+            pltpu.VMEM((qc,), jnp.float32),     # running max
+            pltpu.VMEM((qc,), jnp.float32),     # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

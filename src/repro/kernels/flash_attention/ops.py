@@ -1,0 +1,26 @@
+"""Public wrapper: (B, S, H, D) layout in, kernel layout inside."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                   "kv_block", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B, Sq, H, D); k, v (B, Skv, KVH, D) -> (B, Sq, H, D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_pallas(qt, kt, vt, causal=causal, window=window,
+                                 q_block=q_block, kv_block=kv_block,
+                                 interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .rmsnorm import rmsnorm_pallas
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256,
+            interpret: bool = False):
+    return rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows,
+                          interpret=interpret)

@@ -1,0 +1,46 @@
+"""Fused RMSNorm Pallas kernel.
+
+One pass over HBM: each grid step loads a (rows, d) tile into VMEM,
+computes the f32 row statistics on-chip and writes the normalized tile --
+vs. the unfused XLA path that runs reduce + broadcast-multiply as separate
+HBM round trips.  Grid = (n_row_blocks,); d stays whole (a model dim up to
+8k in bf16 is ~16 KiB/row -- trivially VMEM-resident)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (rows, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
+                   block_rows: int = 256, interpret: bool = False
+                   ) -> jax.Array:
+    """x (..., d); w (d,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xr = x.reshape(-1, d)
+    n = xr.shape[0]
+    rb = min(block_rows, n)
+    while n % rb:
+        rb -= 1
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // rb,),
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(xr, w)
+    return out.reshape(orig_shape)

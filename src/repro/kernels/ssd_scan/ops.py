@@ -1,0 +1,15 @@
+"""Public wrapper for the SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ssd_scan import ssd_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, b, c, dt, da, *, interpret: bool = False):
+    """x (B, nc, Q, nh, hd); b, c (B, nc, Q, ns); dt, da (B, nc, Q, nh)."""
+    return ssd_scan_pallas(x, b, c, dt, da, interpret=interpret)

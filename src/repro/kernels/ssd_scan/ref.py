@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SSD chunk scan (sequential per-token recurrence)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_scan_ref(x: jax.Array, b: jax.Array, c: jax.Array,
+                 dt: jax.Array, da: jax.Array) -> jax.Array:
+    """Token-by-token SSD recurrence (the definitional form):
+
+       h_t = exp(da_t) h_{t-1} + dt_t * b_t (outer) x_t
+       y_t = c_t . h_t
+
+    x (B, nc, Q, nh, hd); b, c (B, nc, Q, ns); dt, da (B, nc, Q, nh).
+    """
+    B, nc, Q, nh, hd = x.shape
+    ns = b.shape[-1]
+    xf = x.reshape(B, nc * Q, nh, hd).astype(jnp.float32)
+    bf = b.reshape(B, nc * Q, ns).astype(jnp.float32)
+    cf = c.reshape(B, nc * Q, ns).astype(jnp.float32)
+    dtf = dt.reshape(B, nc * Q, nh).astype(jnp.float32)
+    daf = da.reshape(B, nc * Q, nh).astype(jnp.float32)
+
+    def step(h, inp):
+        xt, bt, ct, dtt, dat = inp
+        h = jnp.exp(dat)[..., None, None] * h + jnp.einsum(
+            "bs,bh,bhd->bhsd", bt, dtt, xt)
+        y = jnp.einsum("bs,bhsd->bhd", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, nh, ns, hd), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(bf, 1, 0),
+          jnp.moveaxis(cf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(daf, 1, 0))
+    _, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(x.shape).astype(x.dtype)

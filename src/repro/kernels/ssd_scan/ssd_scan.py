@@ -1,0 +1,88 @@
+"""Mamba-2 SSD chunk-scan Pallas kernel (TPU target).
+
+Computes, per (batch, head), the chunked SSD recurrence:
+
+  y[c] = (C_c B_c^T * L_c) dt_c x_c  +  exp(cs_c) C_c h_c      (intra+inter)
+  h_{c+1} = exp(tot_c) h_c + B_c^T (dt_c * exp(tot_c - cs_c) x_c)
+
+Grid = (B, nh, nc); the chunk axis nc is the minor/sequential grid dim and
+the head state h (ns, hd) lives in VMEM scratch across chunks.  Inputs are
+pre-chunked: x (B, nc, Q, nh, hd), b/c (B, nc, Q, ns), dA/dt (B, nc, Q, nh).
+Block working set: Q*hd + 2*Q*ns + Q*Q + ns*hd floats; with Q=128/256,
+ns=128, hd=64 this is well under VMEM.  All accumulation in f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, da_ref, y_ref, h_ref, *,
+                Q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)     # (Q, hd)
+    b = b_ref[0, 0].astype(jnp.float32)              # (Q, ns)
+    c = c_ref[0, 0].astype(jnp.float32)              # (Q, ns)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)      # (Q,)
+    da = da_ref[0, 0, :, 0].astype(jnp.float32)      # (Q,)
+
+    cs = jnp.cumsum(da)                              # (Q,)
+    tot = cs[-1]
+    h = h_ref[...]                                   # (ns, hd)
+
+    # inter-chunk: y_inter[q] = exp(cs_q) * (c_q . h)
+    y_inter = jnp.exp(cs)[:, None] * jnp.dot(
+        c, h, preferred_element_type=jnp.float32)    # (Q, hd)
+
+    # intra-chunk: masked decay-weighted attention within the chunk
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    ldecay = jnp.exp(cs[:, None] - cs[None, :])
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    w = jnp.where(qi >= ki, scores * ldecay * dt[None, :], 0.0)
+    y_intra = jnp.dot(w, x, preferred_element_type=jnp.float32)
+
+    y_ref[0, 0, :, 0, :] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state update: h' = exp(tot) h + B^T (dt * exp(tot - cs) * x)
+    sdecay = (dt * jnp.exp(tot - cs))[:, None] * x   # (Q, hd)
+    h_ref[...] = jnp.exp(tot) * h + jnp.dot(
+        b.T, sdecay, preferred_element_type=jnp.float32)
+
+
+def ssd_scan_pallas(x: jax.Array, b: jax.Array, c: jax.Array,
+                    dt: jax.Array, da: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """x (B, nc, Q, nh, hd); b, c (B, nc, Q, ns); dt, da (B, nc, Q, nh).
+    Returns y with x's shape.  Chunk axis is scanned sequentially per
+    (batch, head) with the SSD state carried in VMEM."""
+    B, nc, Q, nh, hd = x.shape
+    ns = b.shape[-1]
+    kernel = functools.partial(_ssd_kernel, Q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, hd),
+                         lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, Q, ns), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ns), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda bi, hi, ci: (bi, ci, 0, hi)),
+            pl.BlockSpec((1, 1, Q, 1), lambda bi, hi, ci: (bi, ci, 0, hi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, 1, hd),
+                               lambda bi, hi, ci: (bi, ci, 0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((ns, hd), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, dt, da)

@@ -1,0 +1,145 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the step on
+the production meshes and record memory / cost / collective analysis:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k --mesh single            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json.  The
+``XLA_FLAGS`` override above MUST run before any jax import -- jax locks
+the device count at first init (which is why only this module sets it).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+
+from ..configs import all_arch_names, get_config
+from ..models.config import ModelConfig
+from . import hlo_analysis
+from .mesh import make_production_mesh
+from .shapes import SHAPES, applicable
+from .steps import lower_cell
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+def model_flops_per_chip(cfg: ModelConfig, shape, n_chips: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N per token (decode),
+    with N = active params (MoE uses activated experts only)."""
+    n_active = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks / n_chips
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * toks / n_chips
+    toks = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * toks / n_chips
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             save: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_name)
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": mesh_kind}
+    if not ok:
+        result["status"] = "skip"
+        result["reason"] = reason
+        return result
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    # memory policy: wide models microbatch the 1M-token train step
+    accum = 4 if (shape.kind == "train" and cfg.d_model >= 5120) else 1
+    result["accum_steps"] = accum
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(cfg, shape, mesh, accum_steps=accum)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        cost = compiled.cost_analysis()
+        mema = hlo_analysis.memory_analysis_dict(compiled)
+        coll = hlo_analysis.collective_stats(compiled.as_text())
+        mf = model_flops_per_chip(cfg, shape, n_chips)
+        terms = hlo_analysis.roofline_terms(cost, coll["total_bytes"], mf)
+        result.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": mema,
+            "collectives": coll,
+            "roofline": terms,
+            "cost_keys": {k: cost[k] for k in ("flops", "bytes accessed")
+                          if k in cost} if cost else {},
+        })
+    except Exception as e:  # deliberate: a failing cell is a bug report
+        result["status"] = "fail"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-3000:]
+    if save:
+        os.makedirs(ARTIFACTS, exist_ok=True)
+        fn = os.path.join(ARTIFACTS,
+                          f"{arch}__{shape_name}__{mesh_kind}.json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = all_arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                r = run_cell(arch, shape, mk)
+                if r["status"] == "ok":
+                    rt = r["roofline"]
+                    print(f"OK   {arch:24s} {shape:12s} {mk:6s} "
+                          f"compile={r['compile_s']:7.1f}s "
+                          f"bottleneck={rt['bottleneck']:10s} "
+                          f"frac={rt.get('roofline_fraction', 0):.3f}",
+                          flush=True)
+                    if r.get("memory"):
+                        print(f"     mem/chip: "
+                              f"args={r['memory'].get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                              f"temp={r['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+                              flush=True)
+                elif r["status"] == "skip":
+                    print(f"SKIP {arch:24s} {shape:12s} {mk:6s} {r['reason']}",
+                          flush=True)
+                else:
+                    failures += 1
+                    print(f"FAIL {arch:24s} {shape:12s} {mk:6s} {r['error']}",
+                          flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

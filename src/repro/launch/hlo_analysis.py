@@ -1,0 +1,147 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``compiled.as_text()`` is the per-device partitioned module; we sum operand
+bytes of every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), giving per-chip bytes moved through the
+interconnect per step.  ``cost_analysis()`` supplies per-device FLOPs and
+bytes accessed.  Roofline constants are TPU v5e.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (1 link-equivalent per chip)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,128]{1,0}  /  f32[]  /  (bf16[8,4], f32[8])
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+                     r"([a-z][a-z0-9\-]*)\(")
+_NAME_RE = re.compile(r"%[\w\.\-]+")
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-op-kind operand bytes + counts from partitioned HLO text.
+
+    Operands are name references; a first pass builds a symbol table from
+    every instruction's result type (tuple types sum their element shapes).
+    Async forms (``all-reduce-start``/``-done``) count once at ``-start``.
+    """
+    defs: Dict[str, int] = {}
+    rows: List[tuple] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rtype, op = m.groups()
+        defs[name] = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(rtype))
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            # operand names: inside the first paren group after the op name
+            call = line[m.end():]
+            depth, buf = 1, []
+            for ch in call:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                buf.append(ch)
+            rows.append((base, _NAME_RE.findall("".join(buf))))
+    stats: Dict[str, Any] = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for kind, operands in rows:
+        b = sum(defs.get(o, 0) for o in operands)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += b
+    stats["total_bytes"] = sum(v["bytes"] for v in stats.values()
+                               if isinstance(v, dict))
+    return stats
+
+
+def roofline_terms(cost: Optional[Dict[str, float]], coll_bytes: int,
+                   model_flops_per_chip: float = 0.0,
+                   analytic_bytes_per_chip: float = 0.0) -> Dict[str, float]:
+    """Three roofline terms in seconds (per-chip quantities in, time out).
+
+    Two memory terms are reported: ``t_memory_hlo_s`` from cost_analysis
+    "bytes accessed" (on the CPU backend this sums per-instruction operand
+    bytes with little fusion and f32-upcast bf16 -- a loose upper bound),
+    and ``t_memory_s`` from the analytic traffic model (weights + optimizer
+    + boundary activations + caches), which is what a fused TPU program
+    actually moves.  Bottleneck/fraction use the analytic term.
+    """
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    mem_hlo = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    t_compute = flops / PEAK_FLOPS
+    t_mem_hlo = mem_hlo / HBM_BW
+    t_memory = (analytic_bytes_per_chip / HBM_BW
+                if analytic_bytes_per_chip else t_mem_hlo)
+    t_coll = coll_bytes / ICI_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+    out = {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": mem_hlo,
+        "analytic_bytes_per_chip": analytic_bytes_per_chip,
+        "coll_bytes_per_chip": float(coll_bytes),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_hlo_s": t_mem_hlo,
+        "t_collective_s": t_coll,
+        "bottleneck": dom,
+    }
+    if model_flops_per_chip:
+        out["model_flops_per_chip"] = model_flops_per_chip
+        out["useful_flop_ratio"] = (model_flops_per_chip / flops
+                                    if flops else 0.0)
+        peak_t = model_flops_per_chip / PEAK_FLOPS
+        tot = max(t_compute, t_memory, t_coll)
+        out["roofline_fraction"] = peak_t / tot if tot else 0.0
+    return out
+
+
+def memory_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        live = out.get("argument_size_in_bytes", 0) \
+            + out.get("output_size_in_bytes", 0) \
+            + out.get("temp_size_in_bytes", 0) \
+            - out.get("alias_size_in_bytes", 0)
+        out["peak_live_bytes_est"] = live
+    return out

@@ -1,0 +1,45 @@
+"""Unified model API over the decoder-only and encoder-decoder families."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+
+from .config import ModelConfig
+from . import encdec, lm
+
+
+class ModelAPI:
+    """Family-dispatching facade: init / loss / prefill / decode."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._m = encdec if cfg.n_encoder_layers else lm
+
+    def init_params(self, rng) -> Dict:
+        return self._m.init_params(self.cfg, rng)
+
+    def loss_fn(self, params, batch) -> Tuple[jax.Array, Dict]:
+        return self._m.loss_fn(self.cfg, params, batch)
+
+    def train_forward(self, params, batch):
+        return self._m.train_forward(self.cfg, params, batch)
+
+    def prefill(self, params, batch):
+        return self._m.prefill(self.cfg, params, batch)
+
+    def init_cache(self, batch: int, seq: int):
+        if self.cfg.n_encoder_layers:
+            return encdec.init_cache(self.cfg, batch, seq, seq)
+        return lm.init_cache(self.cfg, batch, seq)
+
+    def decode_step(self, params, cache, tokens):
+        return self._m.decode_step(self.cfg, params, cache, tokens)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    return ModelAPI(cfg)
+
+
+__all__ = ["ModelConfig", "ModelAPI", "get_model"]

@@ -1,0 +1,249 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The speech frontend (fbank + conv subsampling) is a stub per the assignment:
+``frames`` enter as precomputed (B, S_enc, d_model) embeddings.  The
+encoder is a bidirectional transformer; the decoder adds causal
+self-attention plus cross-attention over the encoder output.
+
+Decode caches: per-layer self-attention KV (ring-free) plus the
+cross-attention K/V computed once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed.sharding import shard
+from .config import ModelConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# -- cross attention ---------------------------------------------------------
+
+
+def cross_attn_init(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"wq": L.dense_init(ks[0], d, cfg.n_heads * hd, dt),
+            "wk": L.dense_init(ks[1], d, cfg.n_heads * hd, dt),
+            "wv": L.dense_init(ks[2], d, cfg.n_heads * hd, dt),
+            "wo": L.dense_init(ks[3], cfg.n_heads * hd, d, dt)}
+
+
+def cross_kv(p: Params, cfg: ModelConfig, enc_out: jax.Array):
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(B, Se, cfg.n_heads, cfg.hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(B, Se, cfg.n_heads, cfg.hd)
+    return k, v
+
+
+def cross_attn_apply(p: Params, cfg: ModelConfig, x: jax.Array,
+                     k: jax.Array, v: jax.Array) -> jax.Array:
+    B, Sq, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, Sq, cfg.n_heads, cfg.hd)
+    q, k, v = L._shard_qkv(cfg, q, k, v)
+    out = L.flash_attention_xla(q, k, v, causal=False,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk,
+                                unroll=cfg.unroll_scans)
+    out = out.reshape(B, Sq, cfg.n_heads * cfg.hd)
+    return shard(out @ p["wo"].astype(x.dtype), "batch", None, None)
+
+
+# -- blocks -------------------------------------------------------------------
+
+
+def enc_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.norm_init(cfg.d_model, cfg),
+            "attn": L.attn_init(ks[0], cfg),
+            "ln2": L.norm_init(cfg.d_model, cfg),
+            "mlp": L.mlp_init(ks[1], cfg)}
+
+
+def dec_block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.norm_init(cfg.d_model, cfg),
+            "attn": L.attn_init(ks[0], cfg),
+            "lnx": L.norm_init(cfg.d_model, cfg),
+            "xattn": cross_attn_init(ks[1], cfg),
+            "ln2": L.norm_init(cfg.d_model, cfg),
+            "mlp": L.mlp_init(ks[2], cfg)}
+
+
+def enc_block_apply(p: Params, cfg: ModelConfig, x, positions):
+    bicfg = cfg.replace(causal=False)
+    x = x + L.attn_apply(p["attn"], bicfg,
+                         L.apply_norm(x, p["ln1"], cfg), positions)
+    x = x + L.mlp_apply(p["mlp"], cfg, L.apply_norm(x, p["ln2"], cfg))
+    return x
+
+
+def dec_block_apply(p: Params, cfg: ModelConfig, x, positions, enc_out):
+    x = x + L.attn_apply(p["attn"], cfg,
+                         L.apply_norm(x, p["ln1"], cfg), positions)
+    k, v = cross_kv(p["xattn"], cfg, enc_out)
+    x = x + cross_attn_apply(p["xattn"], cfg,
+                             L.apply_norm(x, p["lnx"], cfg), k, v)
+    x = x + L.mlp_apply(p["mlp"], cfg, L.apply_norm(x, p["ln2"], cfg))
+    return x
+
+
+def dec_block_decode(p: Params, cfg: ModelConfig, x, cache, pos):
+    h = L.apply_norm(x, p["ln1"], cfg)
+    out, kv = L.attn_decode(p["attn"], cfg, h, cache, pos)
+    x = x + out
+    h = L.apply_norm(x, p["lnx"], cfg)
+    B = x.shape[0]
+    q = (h @ p["xattn"]["wq"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, cfg.hd)
+    xo = L.decode_attention(q, cache["xk"], cache["xv"],
+                            cache["xk"].shape[1],
+                            kv_chunk=cfg.decode_kv_chunk,
+                            unroll=cfg.unroll_scans)
+    x = x + xo.reshape(B, 1, -1) @ p["xattn"]["wo"].astype(x.dtype)
+    x = x + L.mlp_apply(p["mlp"], cfg, L.apply_norm(x, p["ln2"], cfg))
+    new_cache = dict(kv, xk=cache["xk"], xv=cache["xv"])
+    return x, new_cache
+
+
+# -- model --------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    k_emb, k_enc, k_dec, k_head = jax.random.split(rng, 4)
+    V, d = cfg.padded_vocab, cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "dec_embed": (jax.random.normal(k_emb, (V, d), jnp.float32) * 0.02
+                      ).astype(dt),
+        "enc_layers": jax.vmap(lambda k: enc_block_init(k, cfg))(enc_keys),
+        "enc_norm": L.norm_init(d, cfg),
+        "dec_layers": jax.vmap(lambda k: dec_block_init(k, cfg))(dec_keys),
+        "final_norm": L.norm_init(d, cfg),
+        "lm_head": (jax.random.normal(k_head, (V, d), jnp.float32)
+                    * (1.0 / d ** 0.5)).astype(dt),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    B, Se, _ = frames.shape
+    x = shard(frames.astype(jnp.dtype(cfg.dtype)), "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(Se)[None, :], (B, Se))
+
+    def body(xc, lp):
+        return enc_block_apply(lp, cfg, xc, positions), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["enc_layers"], unroll=cfg.unroll_scans)
+    return L.apply_norm(x, params["enc_norm"], cfg)
+
+
+def _decode_stack(cfg, params, x, positions, enc_out):
+    def body(xc, lp):
+        return dec_block_apply(lp, cfg, xc, positions, enc_out), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["dec_layers"], unroll=cfg.unroll_scans)
+    return x
+
+
+def train_forward(cfg: ModelConfig, params: Params, batch: Dict
+                  ) -> Tuple[jax.Array, jax.Array]:
+    enc_out = encode(cfg, params, batch["frames"])
+    tok = batch["tokens"]
+    B, Sd = tok.shape
+    x = params["dec_embed"].astype(jnp.dtype(cfg.dtype))[tok]
+    x = shard(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(Sd)[None, :], (B, Sd))
+    x = _decode_stack(cfg, params, x, positions, enc_out)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", None, "tp"), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict):
+    from .lm import chunked_ce
+    enc_out = encode(cfg, params, batch["frames"])
+    tok = batch["tokens"]
+    B, Sd = tok.shape
+    x = params["dec_embed"].astype(jnp.dtype(cfg.dtype))[tok]
+    x = shard(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(Sd)[None, :], (B, Sd))
+    x = _decode_stack(cfg, params, x, positions, enc_out)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    nll_sum, ntok = chunked_ce(cfg, x, params["lm_head"], batch["labels"])
+    denom = jnp.maximum(ntok, 1.0)
+    loss = nll_sum / denom
+    return loss, {"nll": loss, "aux": jnp.zeros((), jnp.float32),
+                  "ntok": ntok}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict):
+    """Encode frames + run the decoder over the target prefix."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tok = batch["tokens"]
+    B, Sd = tok.shape
+    x = params["dec_embed"].astype(jnp.dtype(cfg.dtype))[tok]
+    positions = jnp.broadcast_to(jnp.arange(Sd)[None, :], (B, Sd))
+
+    def body(xc, lp):
+        h = L.apply_norm(xc, lp["ln1"], cfg)
+        _, k, v = L.qkv_project(lp["attn"], cfg, h, positions)
+        xo = dec_block_apply(lp, cfg, xc, positions, enc_out)
+        xk, xv = cross_kv(lp["xattn"], cfg, enc_out)
+        return xo, {"k": k, "v": v, "xk": xk, "xv": xv}
+
+    x, caches = lax.scan(body, x, params["dec_layers"],
+                         unroll=cfg.unroll_scans)
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], {"layers": caches,
+                          "pos": jnp.full((B,), Sd, jnp.int32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, enc_seq: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    nl, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    return {"layers": {
+        "k": jnp.zeros((nl, batch, seq, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((nl, batch, seq, cfg.n_kv_heads, hd), dt),
+        "xk": jnp.zeros((nl, batch, enc_seq, H, hd), dt),
+        "xv": jnp.zeros((nl, batch, enc_seq, H, hd), dt)},
+        "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict,
+                tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    pos = cache["pos"]
+    x = params["dec_embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+
+    def body(xc, layer):
+        lp, lc = layer
+        xo, c = dec_block_decode(lp, cfg, xc, lc, pos)
+        return xo, c
+
+    x, new_caches = lax.scan(body, x,
+                             (params["dec_layers"], cache["layers"]),
+                             unroll=cfg.unroll_scans)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    V = cfg.vocab_size
+    if cfg.padded_vocab > V:
+        neg = jnp.full((cfg.padded_vocab - V,), -jnp.inf, logits.dtype)
+        logits = logits.at[..., V:].set(neg)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, {"layers": new_caches, "pos": pos + 1}

@@ -1,0 +1,381 @@
+"""Decoder-only language models: dense / MoE / MLA / SSM / hybrid.
+
+Layer stacks are ``lax.scan`` over stacked per-layer parameters (compile
+time and HLO size independent of depth), with full-block rematerialization
+when ``cfg.remat == "block"``.
+
+Three entry points (what the dry-run lowers):
+
+  train_forward  -> logits + aux  (full sequence, causal)
+  prefill        -> last-position logits + stacked decode caches
+  decode_step    -> next-token logits + updated caches (one token)
+
+Multimodal stubs: ``patches`` (VLM) and ``frames`` (audio encoder-decoder
+lives in encdec.py) enter as precomputed ``d_model`` embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed.sharding import shard
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, kind: str) -> Params:
+    """kind: dense | moe | ssm | hybrid (+ '_densemlp' override for the
+    first-k-dense MoE layers)."""
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if kind != "ssm":
+        p["ln1"] = L.norm_init(cfg.d_model, cfg)
+        p["attn"] = (L.mla_init(ks[0], cfg) if cfg.mla
+                     else L.attn_init(ks[0], cfg))
+        p["ln2"] = L.norm_init(cfg.d_model, cfg)
+        if kind == "moe":
+            p["moe"] = L.moe_init(ks[1], cfg)
+        elif kind == "dense_first":
+            # deepseek first-k-dense layers use the big dense FFN
+            p["mlp"] = L.mlp_init(ks[1], cfg, d_ff=cfg.first_dense_ff)
+        else:
+            p["mlp"] = L.mlp_init(ks[1], cfg)
+        if kind == "hybrid":
+            p["ssm"] = S.ssd_init(ks[2], cfg)
+    else:
+        p["ln1"] = L.norm_init(cfg.d_model, cfg)
+        p["ssm"] = S.ssd_init(ks[2], cfg)
+    return p
+
+
+def _mix(p: Params, cfg: ModelConfig, x: jax.Array, positions, kind: str):
+    """The token-mixing half of a block (attention / SSD / both)."""
+    h = L.apply_norm(x, p["ln1"], cfg)
+    if kind == "ssm":
+        return S.ssd_apply(p["ssm"], cfg, h)
+    if cfg.mla:
+        out = L.mla_apply(p["attn"], cfg, h, positions)
+    else:
+        out = L.attn_apply(p["attn"], cfg, h, positions)
+    if kind == "hybrid":
+        out = 0.5 * (out + S.ssd_apply(p["ssm"], cfg, h))
+    return out
+
+
+def block_apply(p: Params, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array, kind: str) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    x = x + _mix(p, cfg, x, positions, kind)
+    if kind == "ssm":
+        return x, aux
+    h = L.apply_norm(x, p["ln2"], cfg)
+    if kind == "moe":
+        y, aux = L.moe_apply(p["moe"], cfg, h)
+    else:
+        y = L.mlp_apply(p["mlp"], cfg, h)
+    return x + y, aux
+
+
+def block_prefill(p: Params, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, kind: str) -> Tuple[jax.Array, Dict]:
+    """Forward + produce this layer's decode cache."""
+    h = L.apply_norm(x, p["ln1"], cfg)
+    cache: Dict = {}
+    if kind == "ssm":
+        out, cache["ssm"] = S.ssd_apply(p["ssm"], cfg, h, with_cache=True)
+        x = x + out
+        return x, cache
+    B, Sq, _ = h.shape
+    if cfg.mla:
+        out = L.mla_apply(p["attn"], cfg, h, positions)
+        q_nope, q_rope, c, kr = L._mla_qc(p["attn"], cfg, h, positions)
+        cache["c"], cache["kr"] = c, kr
+    else:
+        out = L.attn_apply(p["attn"], cfg, h, positions)
+        _, k, v = L.qkv_project(p["attn"], cfg, h, positions)
+        W = min(Sq, cfg.sliding_window) if cfg.sliding_window else Sq
+        if W < Sq:  # ring layout consistent with decode's slot = pos % W
+            kl, vl = k[:, Sq - W:], v[:, Sq - W:]
+            idx = (Sq - W + jnp.arange(W)) % W
+            cache["k"] = jnp.zeros_like(kl).at[:, idx].set(kl)
+            cache["v"] = jnp.zeros_like(vl).at[:, idx].set(vl)
+        else:
+            cache["k"], cache["v"] = k, v
+    if kind == "hybrid":
+        s_out, cache["ssm"] = S.ssd_apply(p["ssm"], cfg, h, with_cache=True)
+        out = 0.5 * (out + s_out)
+    x = x + out
+    h = L.apply_norm(x, p["ln2"], cfg)
+    if kind == "moe":
+        y, _ = L.moe_apply(p["moe"], cfg, h)
+    else:
+        y = L.mlp_apply(p["mlp"], cfg, h)
+    return x + y, cache
+
+
+def block_decode(p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict,
+                 pos: jax.Array, kind: str) -> Tuple[jax.Array, Dict]:
+    h = L.apply_norm(x, p["ln1"], cfg)
+    new_cache: Dict = {}
+    if kind == "ssm":
+        out, new_cache["ssm"] = S.ssd_decode(p["ssm"], cfg, h, cache["ssm"])
+        return x + out, new_cache
+    if cfg.mla:
+        out, mc = L.mla_decode(p["attn"], cfg, h, cache, pos)
+        new_cache.update(mc)
+    else:
+        out, kc = L.attn_decode(p["attn"], cfg, h, cache, pos)
+        new_cache.update(kc)
+    if kind == "hybrid":
+        s_out, new_cache["ssm"] = S.ssd_decode(p["ssm"], cfg, h, cache["ssm"])
+        out = 0.5 * (out + s_out)
+    x = x + out
+    h = L.apply_norm(x, p["ln2"], cfg)
+    if kind == "moe":
+        y, _ = L.moe_apply(p["moe"], cfg, h)
+    else:
+        y = L.mlp_apply(p["mlp"], cfg, h)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+
+def _layer_kinds(cfg: ModelConfig) -> Tuple[str, int, int]:
+    """(scan_kind, n_first_dense, n_scan)."""
+    if cfg.family == "ssm":
+        return "ssm", 0, cfg.n_layers
+    if cfg.hybrid:
+        return "hybrid", 0, cfg.n_layers
+    if cfg.is_moe:
+        return "moe", cfg.first_k_dense, cfg.n_layers - cfg.first_k_dense
+    return "dense", 0, cfg.n_layers
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    kind, n_first, n_scan = _layer_kinds(cfg)
+    k_emb, k_first, k_layers, k_head = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    V, d = cfg.padded_vocab, cfg.d_model
+    p: Params = {
+        "embed": (jax.random.normal(k_emb, (V, d), jnp.float32) * 0.02
+                  ).astype(dt),
+        "final_norm": L.norm_init(d, cfg),
+        "lm_head": (jax.random.normal(k_head, (V, d), jnp.float32)
+                    * (1.0 / d ** 0.5)).astype(dt),
+    }
+    keys = jax.random.split(k_layers, n_scan)
+    p["layers"] = jax.vmap(lambda k: block_init(k, cfg, kind))(keys)
+    for i in range(n_first):
+        p[f"first_{i}"] = block_init(jax.random.fold_in(k_first, i), cfg,
+                                     "dense_first")
+    return p
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Token (+ stub-modality) embeddings and positions."""
+    emb = params["embed"]
+    tok = batch["tokens"]
+    x = emb.astype(jnp.dtype(cfg.dtype))[tok]
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    B, Stot = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Stot)[None, :], (B, Stot))
+    from ..distributed.sharding import axis_size
+    seq = "seq" if Stot % max(axis_size("seq"), 1) == 0 else None
+    x = shard(x, "batch", seq, None)
+    return x, positions
+
+
+def _run_stack(cfg: ModelConfig, params: Params, x, positions
+               ) -> Tuple[jax.Array, jax.Array]:
+    kind, n_first, _ = _layer_kinds(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(n_first):
+        x, a = block_apply(params[f"first_{i}"], cfg, x, positions,
+                           "dense_first")
+        aux += a
+
+    def body(carry, lp):
+        xc, auxc = carry
+        xo, a = block_apply(lp, cfg, xc, positions, kind)
+        # layer-boundary activations are (batch x seq)-sharded so the
+        # remat-saved carries divide over the whole mesh (Megatron-SP)
+        xo = shard(xo, "batch", "seq", None)
+        return (xo, auxc + a), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    (x, aux), _ = lax.scan(body, (x, aux), params["layers"],
+                           unroll=cfg.unroll_scans)
+    return x, aux
+
+
+def train_forward(cfg: ModelConfig, params: Params, batch: Dict
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits. Returns (logits_f32, aux_loss)."""
+    x, positions = _embed_inputs(cfg, params, batch)
+    x, aux = _run_stack(cfg, params, x, positions)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    if cfg.family == "vlm":  # only text positions produce logits
+        x = x[:, -batch["tokens"].shape[1]:]
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "batch", None, "tp"), aux
+
+
+def chunked_ce(cfg: ModelConfig, x: jax.Array, lm_head: jax.Array,
+               labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy without materializing full-sequence logits.
+
+    Scans over sequence chunks; each chunk's (B, C, V) logits live only
+    inside a remat block, bounding the memory term by one chunk.  Returns
+    (nll_sum, token_count)."""
+    B, S, d = x.shape
+    mask = (labels >= 0)
+    labels = jnp.maximum(labels, 0)
+    C = cfg.loss_chunk
+    head = lm_head.astype(x.dtype)
+
+    def ce(xb, lb, mb):
+        logits = jnp.einsum("btd,vd->btv", xb, head,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "batch", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via one-hot contraction: take_along_axis over the
+        # vocab-SHARDED axis makes GSPMD all-gather the logits; the one-hot
+        # einsum reduces locally + psums a (B, C) scalar field instead
+        oh = jax.nn.one_hot(lb, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("btv,btv->bt", logits, oh)
+        return jnp.sum((lse - gold) * mb)
+
+    if not C or S <= C or S % C:
+        nll = ce(x, labels, mask.astype(jnp.float32))
+        return nll, mask.sum().astype(jnp.float32)
+
+    n = S // C
+    xc = jnp.moveaxis(x.reshape(B, n, C, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, C), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, n, C), 1, 0).astype(jnp.float32)
+
+    def body(acc, inp):
+        xb, lb, mb = inp
+        return acc + ce(xb, lb, mb), None
+
+    nll, _ = lax.scan(jax.checkpoint(body), jnp.zeros((), jnp.float32),
+                      (xc, lc, mc), unroll=cfg.unroll_scans)
+    return nll, mask.sum().astype(jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict
+            ) -> Tuple[jax.Array, Dict]:
+    x, positions = _embed_inputs(cfg, params, batch)
+    x, aux = _run_stack(cfg, params, x, positions)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    if cfg.family == "vlm":  # only text positions produce logits
+        x = x[:, -batch["tokens"].shape[1]:]
+    nll_sum, ntok = chunked_ce(cfg, x, params["lm_head"], batch["labels"])
+    denom = jnp.maximum(ntok, 1.0)
+    loss = nll_sum / denom + aux
+    return loss, {"nll": nll_sum / denom, "aux": aux, "ntok": ntok}
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict
+            ) -> Tuple[jax.Array, Any]:
+    """Process the full prompt; return last-position logits + caches."""
+    kind, n_first, _ = _layer_kinds(cfg)
+    x, positions = _embed_inputs(cfg, params, batch)
+    first_caches = []
+    for i in range(n_first):
+        x, c = block_prefill(params[f"first_{i}"], cfg, x, positions,
+                             "dense_first")
+        first_caches.append(c)
+
+    def body(xc, lp):
+        xo, c = block_prefill(lp, cfg, xc, positions, kind)
+        return xo, c
+
+    x, caches = lax.scan(body, x, params["layers"],
+                         unroll=cfg.unroll_scans)
+    x = L.apply_norm(x[:, -1:], params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits[:, 0], {"layers": caches, "first": first_caches,
+                          "pos": jnp.full((x.shape[0],), positions.shape[1],
+                                          jnp.int32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """Zero decode caches for a max context of ``seq`` tokens."""
+    kind, n_first, n_scan = _layer_kinds(cfg)
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(k: str) -> Dict:
+        c: Dict = {}
+        if k == "ssm":
+            return {"ssm": S.ssd_cache_init(cfg, batch, dt)}
+        if cfg.mla:
+            c = L.mla_cache_init(cfg, batch, seq, dt)
+        else:
+            c = L.kv_cache_init(cfg, batch, seq, dt)
+        if k == "hybrid":
+            c["ssm"] = S.ssd_cache_init(cfg, batch, dt)
+        return c
+
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape).copy()
+        if n_scan else x, one(kind))
+    # scan requires a true stacked copy, broadcast_to gives one post-copy
+    return {"layers": stacked,
+            "first": [one("dense_first") for _ in range(n_first)],
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Dict,
+                tokens: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One greedy decode step. tokens: (B, 1) -> (next (B, 1), new cache)."""
+    kind, n_first, _ = _layer_kinds(cfg)
+    pos = cache["pos"]
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    x = shard(x, "batch", None, None)
+    new_first = []
+    for i in range(n_first):
+        x, c = block_decode(params[f"first_{i}"], cfg, x, cache["first"][i],
+                            pos, "dense_first")
+        new_first.append(c)
+
+    def body(xc, layer):
+        lp, lc = layer
+        xo, c = block_decode(lp, cfg, xc, lc, pos, kind)
+        return xo, c
+
+    x, new_caches = lax.scan(body, x, (params["layers"], cache["layers"]),
+                             unroll=cfg.unroll_scans)
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    # mask vocab padding, then greedy
+    V = cfg.vocab_size
+    neg = jnp.full((cfg.padded_vocab - V,), -jnp.inf, logits.dtype)
+    logits = logits.at[..., V:].set(neg) if cfg.padded_vocab > V else logits
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, {"layers": new_caches, "first": new_first,
+                      "pos": pos + 1}

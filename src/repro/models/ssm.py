@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD, state-space duality) blocks -- arXiv:2405.21060.
+
+Train/prefill uses the chunked SSD algorithm:
+
+  * within a chunk of length Q the output is a masked, decay-weighted
+    attention-like contraction (quadratic in Q only),
+  * chunk boundary states (nh, hd, ns) are passed through a sequential
+    ``lax.scan`` over chunks (linear in sequence length).
+
+The chunk loop materializes at most (B, nh, Q, Q) decay tensors for ONE
+chunk at a time, bounding memory for the 500k-token shapes.  The Pallas
+kernel in ``repro.kernels.ssd_scan`` implements the per-chunk contraction
+with VMEM tiling; this module is the XLA path and the numerical reference.
+
+Decode is the O(1) recurrence ``h = exp(dt*A) h + dt * B outer x``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..distributed.sharding import shard
+from .config import ModelConfig
+from .layers import dense_init, rms_norm_head
+
+Params = Dict[str, Any]
+
+
+def ssd_init(key, cfg: ModelConfig) -> Params:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_ch = di + 2 * ns
+    # dt bias initialized so softplus(dt_bias) spans [1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (nh,), jnp.float32)
+    dt_init = jnp.log(jnp.expm1(jnp.exp(u * (math.log(0.1) - math.log(1e-3))
+                                        + math.log(1e-3))))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * ns + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                     jnp.float32) / math.sqrt(cfg.conv_width)
+                   ).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_init,
+        "gate_norm": jnp.ones((cfg.ssm_head_dim,), jnp.float32),
+        "out_proj": dense_init(ks[3], di, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # sum of shifted slices: cheap, fusion-friendly, no conv op needed
+    S = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + S, :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * ns]
+    dt_raw = proj[..., di + di + 2 * ns :]
+    return z, xbc, dt_raw
+
+
+def ssd_apply(p: Params, cfg: ModelConfig, x_in: jax.Array,
+              with_cache: bool = False):
+    """Full-sequence SSD. x_in: (B, S, d_model) -> (B, S, d_model).
+
+    ``with_cache=True`` additionally returns the decode cache (final state +
+    conv tail) for prefill."""
+    Bsz, S, _ = x_in.shape
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    proj = x_in @ p["in_proj"].astype(x_in.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :di].reshape(Bsz, S, nh, hd)
+    Bm = xbc[..., di : di + ns]                     # (B, S, ns), group=1
+    Cm = xbc[..., di + ns :]                        # (B, S, ns)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])            # (B, S, nh)
+    A = -jnp.exp(p["A_log"])                        # (nh,)
+    dA = dt * A                                     # (B, S, nh)
+
+    xs = shard(xs, "batch", None, None, None)
+
+    # chunked views
+    xs_c = xs.reshape(Bsz, nc, Q, nh, hd)
+    B_c = Bm.reshape(Bsz, nc, Q, ns)
+    C_c = Cm.reshape(Bsz, nc, Q, ns)
+    dt_c = dt.reshape(Bsz, nc, Q, nh)
+    dA_c = dA.reshape(Bsz, nc, Q, nh)
+
+    def chunk_step(h, ci):
+        xb = xs_c[:, ci]                            # (B, Q, nh, hd)
+        bb = B_c[:, ci]                             # (B, Q, ns)
+        cb = C_c[:, ci]                             # (B, Q, ns)
+        dtb = dt_c[:, ci]                           # (B, Q, nh)
+        dab = dA_c[:, ci]                           # (B, Q, nh)
+        cs = jnp.cumsum(dab, axis=1)                # (B, Q, nh)
+        tot = cs[:, -1]                             # (B, nh)
+        # -- inter-chunk: y_inter[q] = exp(cs_q) * C_q . h ------------------
+        decay_in = jnp.exp(cs)                      # (B, Q, nh)
+        y_inter = jnp.einsum("bqs,bhsd->bqhd", cb.astype(jnp.float32),
+                             h) * decay_in[..., None]
+        # -- intra-chunk (quadratic in Q) -----------------------------------
+        scores = jnp.einsum("bqs,bps->bqp", cb.astype(jnp.float32),
+                            bb.astype(jnp.float32))          # (B, Q, Q)
+        ldecay = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B, Q, P, nh)
+        causal = jnp.tril(jnp.ones((Q, Q), bool))
+        ldecay = jnp.where(causal[None, :, :, None], ldecay, 0.0)
+        w = scores[..., None] * ldecay * dtb[:, None, :, :]      # (B,Q,P,nh)
+        y_intra = jnp.einsum("bqph,bphd->bqhd", w,
+                             xs_c[:, ci].astype(jnp.float32))
+        # -- state update ----------------------------------------------------
+        sdecay = jnp.exp(tot[:, None, :] - cs)      # (B, Q, nh)
+        contrib = jnp.einsum("bqs,bqh,bqhd->bhsd",
+                             bb.astype(jnp.float32),
+                             (dtb * sdecay), xb.astype(jnp.float32))
+        h_new = h * jnp.exp(tot)[:, :, None, None] + contrib
+        return h_new, (y_inter + y_intra).astype(x_in.dtype)
+
+    h0 = jnp.zeros((Bsz, nh, ns, hd), jnp.float32)
+    # checkpoint: recompute per-chunk decay/score tensors in backward
+    h_fin, ys = lax.scan(jax.checkpoint(chunk_step), h0, jnp.arange(nc),
+                         unroll=cfg.unroll_scans)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, nh, hd)
+    y = y + xs * p["D"].astype(x_in.dtype)[None, None, :, None]
+    # gated head norm, then out-projection
+    zs = z.reshape(Bsz, S, nh, hd)
+    y = rms_norm_head(y * jax.nn.silu(zs), p["gate_norm"], cfg.norm_eps)
+    y = y.reshape(Bsz, S, di)
+    out = shard(y @ p["out_proj"].astype(x_in.dtype), "batch", None, None)
+    if with_cache:
+        # raw (pre-conv) xbc tail feeds the decode-side conv window
+        raw_xbc = proj[..., di : di + di + 2 * ns]
+        cache = {"h": h_fin,
+                 "conv": raw_xbc[:, S - (cfg.conv_width - 1):, :]}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) recurrence)
+# ---------------------------------------------------------------------------
+
+
+def ssd_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, nh, ns, hd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * ns), dtype),
+    }
+
+
+def ssd_decode(p: Params, cfg: ModelConfig, x_in: jax.Array, cache: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """One-token SSD step. x_in: (B, 1, d_model)."""
+    Bsz = x_in.shape[0]
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x_in[:, 0] @ p["in_proj"].astype(x_in.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    # conv over (cached W-1 inputs, current)
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(x_in.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(x_in.dtype), w) \
+        + p["conv_b"].astype(x_in.dtype)
+    xbc = jax.nn.silu(conv_out)
+    xs = xbc[:, :di].reshape(Bsz, nh, hd)
+    Bm = xbc[:, di : di + ns]
+    Cm = xbc[:, di + ns :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                          # (B, nh)
+    h = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bs,bh,bhd->bhsd", Bm.astype(jnp.float32), dt,
+        xs.astype(jnp.float32))
+    y = jnp.einsum("bs,bhsd->bhd", Cm.astype(jnp.float32), h)
+    y = y.astype(x_in.dtype) + xs * p["D"].astype(x_in.dtype)[None, :, None]
+    zs = z.reshape(Bsz, nh, hd)
+    y = rms_norm_head(y * jax.nn.silu(zs), p["gate_norm"], cfg.norm_eps)
+    out = y.reshape(Bsz, 1, di) @ p["out_proj"].astype(x_in.dtype)
+    new_cache = {"h": h, "conv": hist[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,97 @@
+"""AdamW with f32 master weights, built from scratch (no optax).
+
+Mixed-precision / ZeRO-1 layout (DESIGN.md Section 4):
+
+  * the train state holds f32 master weights + f32 first/second moments,
+    all sharded over (data x model) -- the ZeRO-1 partitioning; compute
+    params are ``master.astype(bf16)`` re-materialized each step (the cast
+    is GSPMD's all-gather, i.e. the ZeRO-1 gather),
+  * gradients arrive in the compute sharding; GSPMD reshards them onto the
+    optimizer sharding (the ZeRO-1 reduce-scatter).
+
+The update is fully functional: ``adamw_update`` returns a new state.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    """Build the optimizer state from (possibly low-precision) params."""
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), t)
+    return {"master": master, "mu": zeros(master), "nu": zeros(master),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, state: Dict[str, Any], grads
+                 ) -> Tuple[Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(m, mu, nu, g):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        decay = cfg.weight_decay if m.ndim >= 2 else 0.0  # no decay on norms
+        m2 = m - lr * (delta + decay * m)
+        return m2, mu, nu
+
+    flat_m, treedef = jax.tree.flatten(state["master"])
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    flat_g = jax.tree.leaves(grads)
+    outs = [upd(m, mu, nu, g) for m, mu, nu, g
+            in zip(flat_m, flat_mu, flat_nu, flat_g)]
+    new = {
+        "master": jax.tree.unflatten(treedef, [o[0] for o in outs]),
+        "mu": jax.tree.unflatten(treedef, [o[1] for o in outs]),
+        "nu": jax.tree.unflatten(treedef, [o[2] for o in outs]),
+        "step": step,
+    }
+    return new, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,70 @@
+"""Error-feedback int8 gradient compression for cross-pod reduction.
+
+At 1000+-node scale the inter-pod links are the scarce resource; the
+standard trick is hierarchical reduction -- reduce-scatter within a pod at
+full precision, all-reduce *across* pods on int8-quantized gradients with
+an error-feedback accumulator so quantization noise is unbiased over steps
+(Seide et al., 1-bit SGD lineage).
+
+``ef_int8_compress(g + err)`` -> (q, scale, new_err); the caller psums
+``q`` over the pod axis and dequantizes.  Pure functions; the train loop
+wires them into a ``shard_map`` over the "pod" axis (train.py), and the
+collective-bytes saving shows up in the dry-run roofline term.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_int8_compress(g: jax.Array, err: jax.Array,
+                     scale: jax.Array = None
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (g + err) to int8.
+
+    ``scale`` may be supplied externally (the collective path shares ONE
+    scale across ranks via pmax -- int8 payloads from different ranks are
+    only summable on a common scale).  Returns (q_int8, scale, new_err)
+    with new_err = input - dequant(q).
+    """
+    x = g.astype(jnp.float32) + err
+    if scale is None:
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, x - deq
+
+
+def ef_int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_tree(grads, err_tree, axis_name: str):
+    """Quantize+psum each leaf over ``axis_name`` (call inside shard_map).
+
+    The int8 payload crosses the wire; scales are psum'd separately (4 bytes
+    per tensor).  Dequantization averages over the axis size.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, err):
+        # shared scale across the axis: int8 payloads are only summable on
+        # a common scale (4-byte pmax per tensor crosses the wire)
+        amax = jnp.max(jnp.abs(g.astype(jnp.float32) + err))
+        scale = jnp.maximum(jax.lax.pmax(amax, axis_name), 1e-12) / 127.0
+        q, _, new_err = ef_int8_compress(g, err, scale=scale)
+        # int8 collectives: sum in int32 to avoid overflow across pods
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        avg = qsum.astype(jnp.float32) * scale / n
+        return avg.astype(g.dtype), new_err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_tree)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    g_out = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    e_out = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return g_out, e_out

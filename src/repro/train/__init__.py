@@ -1,0 +1,3 @@
+from .loop import StragglerDetector, Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "StragglerDetector"]

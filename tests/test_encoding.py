@@ -1,0 +1,84 @@
+"""Binary encoding + timestamp compression roundtrips."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import (Handle, IterPattern, RankPattern,
+                                 decode_signature, decode_value,
+                                 encode_signature, encode_value,
+                                 read_uvarint, write_uvarint, zigzag,
+                                 unzigzag)
+from repro.core.timestamps import (TimestampBuffer, compress_timestamps,
+                                   decompress_timestamps,
+                                   delta_zigzag_decode, delta_zigzag_encode)
+
+values = st.recursive(
+    st.none() | st.booleans() | st.integers(-2**40, 2**40)
+    | st.floats(allow_nan=False, allow_infinity=False) | st.text(max_size=20)
+    | st.binary(max_size=20)
+    | st.builds(Handle, st.integers(0, 1000))
+    | st.builds(RankPattern, st.integers(-2**20, 2**20),
+                st.integers(-2**20, 2**20)),
+    lambda c: st.tuples(c, c) | st.builds(IterPattern, c, c),
+    max_leaves=8)
+
+
+@settings(max_examples=200, deadline=None)
+@given(values)
+def test_value_roundtrip(v):
+    buf = bytearray()
+    encode_value(buf, v)
+    out, pos = decode_value(bytes(buf), 0)
+    assert pos == len(buf)
+    assert out == v
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**16), st.integers(0, 7), st.integers(0, 15),
+       st.lists(values, max_size=5), values)
+def test_signature_roundtrip(fid, tid, depth, args, ret):
+    sig = encode_signature(fid, tid, depth, tuple(args), ret)
+    f2, t2, d2, a2, r2 = decode_signature(sig)
+    assert (f2, t2, d2, a2, r2) == (fid, tid, depth, tuple(args), ret)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(-2**62, 2**62))
+def test_zigzag(n):
+    assert unzigzag(zigzag(n)) == n
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 2**32 - 1), max_size=40))
+def test_uvarint(vals):
+    buf = bytearray()
+    for v in vals:
+        write_uvarint(buf, v)
+    pos = 0
+    out = []
+    for _ in vals:
+        v, pos = read_uvarint(bytes(buf), pos)
+        out.append(v)
+    assert out == vals and pos == len(buf)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2**31), st.integers(0, 2**31)),
+                max_size=100))
+def test_timestamp_roundtrip(pairs):
+    buf = TimestampBuffer()
+    for a, b in pairs:
+        buf.append(a, b)
+    arr = buf.as_array()
+    assert len(arr) == len(pairs)
+    back = decompress_timestamps(compress_timestamps(arr))
+    np.testing.assert_array_equal(back, arr)
+
+
+def test_delta_zigzag_inverse():
+    rng = np.random.RandomState(0)
+    ticks = np.cumsum(rng.randint(0, 10000, size=(512, 2)).ravel()) \
+        .astype(np.uint32).reshape(-1, 2)
+    zz = delta_zigzag_encode(ticks)
+    np.testing.assert_array_equal(delta_zigzag_decode(zz), ticks)

@@ -1,0 +1,99 @@
+"""Intra-process pattern tracker <-> decoder mirror property, and the
+inter-process merge invariants."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import IterPattern, RankPattern
+from repro.core.interprocess import _fit_component, merge_csts, dedupe_cfgs
+from repro.core.patterns import IntraPatternDecoder, IntraPatternTracker
+from repro.core.specs import REGISTRY
+import repro.core.apis  # noqa: F401  (populate registry)
+
+
+@settings(max_examples=150, deadline=None)
+@given(st.lists(st.integers(0, 2**20), min_size=0, max_size=60))
+def test_tracker_decoder_mirror(offsets):
+    """decode(encode(stream)) == stream for ANY offset sequence."""
+    enc = IntraPatternTracker()
+    dec = IntraPatternDecoder()
+    key = ("f", 0)
+    for off in offsets:
+        encoded = enc.encode(key, (off,))
+        out = dec.decode(key, encoded)
+        assert out == [off]
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 500), st.integers(2, 40))
+def test_arithmetic_run_compresses_to_two(b, a, n):
+    """i*a + b runs produce exactly two distinct encodings (concrete head +
+    one IterPattern), which is what keeps the CST constant-size."""
+    enc = IntraPatternTracker()
+    outs = [tuple(enc.encode("k", (b + i * a,))) for i in range(n)]
+    assert len(set(outs)) == 2
+    assert outs[1] == (IterPattern(a, b),)
+
+
+def test_multi_offset_joint_run():
+    enc = IntraPatternTracker()
+    dec = IntraPatternDecoder()
+    for i in range(10):
+        e = enc.encode("k", (i * 4, i * 100 + 7))
+        assert dec.decode("k", e) == [i * 4, i * 100 + 7]
+
+
+def test_fit_component():
+    assert _fit_component([5, 5, 5]) == 5
+    assert _fit_component([3, 7, 11, 15]) == RankPattern(4, 3)
+    assert _fit_component([3, 7, 12]) is None
+    assert _fit_component([1]) == 1
+
+
+def test_dedupe_cfgs():
+    res = dedupe_cfgs([b"A", b"B", b"A", b"A"])
+    assert res.unique_cfgs == [b"A", b"B"]
+    assert res.cfg_index == [0, 1, 0, 0]
+
+
+def _sig(fid, args, ret=0):
+    from repro.core.encoding import encode_signature
+    return encode_signature(fid, 0, 0, args, ret)
+
+
+def test_merge_rank_linear():
+    """Paper Fig 3(c): per-rank offsets rank*a+b merge to one entry."""
+    fid = REGISTRY.id_of("pwrite")
+    nranks = 4
+    csts = [[_sig(fid, (None, 64, r * 100))] for r in range(nranks)]
+    merged = merge_csts(csts, REGISTRY)
+    assert len(merged.merged_entries) == 1
+    assert merged.n_rank_patterns == 1
+    # every rank remaps its terminal 0 to merged terminal 0
+    assert all(m[0] == 0 for m in merged.remaps)
+
+
+def test_merge_respects_occurrence_index():
+    """Two occurrences of the same masked signature on each rank must merge
+    occurrence-by-occurrence, not cross-match."""
+    fid = REGISTRY.id_of("pwrite")
+    csts = [[_sig(fid, (None, 64, r * 10)), _sig(fid, (None, 64, 5000 + r * 10))]
+            for r in range(3)]
+    merged = merge_csts(csts, REGISTRY)
+    assert len(merged.merged_entries) == 2
+
+
+def test_merge_partial_rank_group_not_fitted():
+    """Entries missing on some rank (collective-I/O aggregators) are kept
+    per-rank rather than wrongly merged."""
+    fid = REGISTRY.id_of("pwrite")
+    csts = [[_sig(fid, (None, 64, 0))], [_sig(fid, (None, 64, 100))], []]
+    merged = merge_csts(csts, REGISTRY)
+    assert len(merged.merged_entries) == 2  # no fit without full coverage
+
+
+def test_merge_no_inter_flag():
+    fid = REGISTRY.id_of("pwrite")
+    csts = [[_sig(fid, (None, 64, r * 100))] for r in range(4)]
+    merged = merge_csts(csts, REGISTRY, inter_patterns=False)
+    assert len(merged.merged_entries) == 4

@@ -1,0 +1,186 @@
+"""End-to-end Recorder behaviour: tracing sessions, lossless read-back,
+filtering, layers, threads, converters, baselines."""
+
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import trace_format
+from repro.core.apis import framework as frame
+from repro.core.apis import posix, shardio
+from repro.core.baselines import DarshanLike, RecorderOld, ToolAdapter
+from repro.core.converters import read_columnar, to_chrome_timeline, \
+    to_columnar
+from repro.core.reader import TraceReader
+from repro.core.recorder import Recorder, RecorderConfig, attach, detach, \
+    session
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    d = tmp_path / "data"
+    d.mkdir()
+    return str(tmp_path / "trace"), str(d)
+
+
+def _workload(datadir, n=50):
+    fd = posix.open(os.path.join(datadir, "f.bin"), os.O_RDWR | os.O_CREAT,
+                    0o644)
+    for i in range(n):
+        posix.pwrite(fd, b"x" * 64, i * 64)
+    posix.fsync(fd)
+    posix.close(fd)
+
+
+def test_session_roundtrip(dirs):
+    tracedir, datadir = dirs
+    with session(RecorderConfig(trace_dir=tracedir)) as rec:
+        _workload(datadir)
+        for s in range(20):
+            frame.step(s)
+    r = TraceReader(tracedir)
+    recs = list(r.iter_records(0))
+    assert len(recs) == rec.n_records
+    offs = [rc.arg("offset") for rc in recs if rc.func == "pwrite"]
+    assert offs == [i * 64 for i in range(50)]
+    assert [rc.arg("step_idx") for rc in recs if rc.func == "step"] \
+        == list(range(20))
+    # timestamps are monotone non-decreasing entry times
+    ts = [rc.t_entry for rc in recs]
+    assert all(a <= b for a, b in zip(ts, ts[1:]))
+
+
+def test_call_depth_chain(dirs):
+    tracedir, datadir = dirs
+    with session(RecorderConfig(trace_dir=tracedir)):
+        fh = shardio.shard_open(os.path.join(datadir, "s.bin"), 1)
+        shardio.shard_write_at(fh, b"y" * 8, 0)
+        shardio.shard_close(fh)
+    r = TraceReader(tracedir)
+    depth = {(rc.func): rc.depth for rc in r.iter_records(0)}
+    assert depth["shard_open"] == 0 and depth["open"] == 1
+    assert depth["shard_write_at"] == 0 and depth["pwrite"] == 1
+
+
+def test_path_prefix_filtering(dirs, tmp_path):
+    tracedir, datadir = dirs
+    other = tmp_path / "other"
+    other.mkdir()
+    cfg = RecorderConfig(trace_dir=tracedir, path_prefixes=[datadir])
+    with session(cfg) as rec:
+        _workload(datadir, n=5)
+        fd = posix.open(str(other / "x.bin"), os.O_RDWR | os.O_CREAT, 0o644)
+        posix.pwrite(fd, b"z", 0)     # must be skipped (untracked handle)
+        posix.close(fd)
+    assert rec.n_skipped == 3
+    r = TraceReader(tracedir)
+    paths = [rc.args[0] for rc in r.iter_records(0) if rc.func == "open"]
+    assert all(p.startswith(datadir) for p in paths)
+
+
+def test_layer_toggle(dirs):
+    tracedir, datadir = dirs
+    with session(RecorderConfig(trace_dir=tracedir,
+                                layers={"shardio"})) as rec:
+        fh = shardio.shard_open(os.path.join(datadir, "s.bin"), 1)
+        shardio.shard_write_at(fh, b"y" * 8, 0)
+        shardio.shard_close(fh)
+    r = TraceReader(tracedir)
+    layers = {rc.layer for rc in r.iter_records(0)}
+    assert layers == {"shardio"}
+
+
+def test_multithreaded_tracing(dirs):
+    tracedir, datadir = dirs
+    with session(RecorderConfig(trace_dir=tracedir)) as rec:
+        def worker(i):
+            fd = posix.open(os.path.join(datadir, f"t{i}.bin"),
+                            os.O_RDWR | os.O_CREAT, 0o644)
+            for j in range(10):
+                posix.pwrite(fd, b"t", j)
+            posix.close(fd)
+        ts = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    r = TraceReader(tracedir)
+    threads = {rc.thread for rc in r.iter_records(0)}
+    assert len(threads) == 3
+    assert r.n_records(0) == 3 * 12
+
+
+def test_handle_reuse_constant_signatures(dirs):
+    """Re-opening files (rolling checkpoints) must not mint new handle ids."""
+    tracedir, datadir = dirs
+    with session(RecorderConfig(trace_dir=tracedir)) as rec:
+        for cycle in range(5):
+            fh = shardio.shard_open(os.path.join(datadir, "roll.bin"), 1)
+            shardio.shard_write_at(fh, b"x" * 16, 0)
+            shardio.shard_close(fh)
+    assert len(rec.cst) == len(set(rec.cst.entries))
+    # cycles 2..5 add no new signatures -> small constant CST
+    assert len(rec.cst) <= 8
+
+
+def test_error_capture(dirs):
+    tracedir, datadir = dirs
+    with session(RecorderConfig(trace_dir=tracedir)):
+        with pytest.raises(FileNotFoundError):
+            posix.open(os.path.join(datadir, "missing", "x"), os.O_RDONLY,
+                       0o644)
+    r = TraceReader(tracedir)
+    recs = list(r.iter_records(0))
+    assert recs[0].ret == ("err", "FileNotFoundError")
+
+
+def test_chrome_and_columnar_converters(dirs):
+    tracedir, datadir = dirs
+    with session(RecorderConfig(trace_dir=tracedir)) as rec:
+        _workload(datadir, n=30)
+    out = os.path.join(tracedir, "chrome.json")
+    n = to_chrome_timeline(tracedir, out)
+    events = json.load(open(out))["traceEvents"]
+    assert n == len(events) == rec.n_records
+    cols_dir = os.path.join(tracedir, "cols")
+    to_columnar(tracedir, cols_dir)
+    cols = read_columnar(cols_dir)
+    assert len(cols["offset"]) == rec.n_records
+    got = [o for o in cols["offset"] if o >= 0]
+    assert got == [i * 64 for i in range(30)]
+
+
+def test_baseline_adapters(dirs, tmp_path):
+    _, datadir = dirs
+    old = RecorderOld(0)
+    attach(ToolAdapter(old))
+    try:
+        _workload(datadir, n=40)
+    finally:
+        detach()
+    assert old.n_records == 43
+    assert old.nbytes > 0
+    dar = DarshanLike(0)
+    attach(ToolAdapter(dar))
+    try:
+        _workload(datadir, n=40)
+    finally:
+        detach()
+    assert dar.n_records == 43
+    blob = dar.serialize()
+    assert 0 < len(blob) < old.nbytes  # counters < per-record trace
+
+
+def test_peephole_compresses_regular_writes(dirs):
+    _, datadir = dirs
+    old = RecorderOld(0)
+    attach(ToolAdapter(old))
+    try:
+        _workload(datadir, n=500)
+    finally:
+        detach()
+    # repeat tokens: ~10 bytes per repeated call, full record for the rest
+    assert old.nbytes < 500 * 12 + 1000

@@ -1,0 +1,91 @@
+"""Sequitur (exponent-carrying) property + unit tests."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sequitur import (Sequitur, expand_grammar, parse_grammar,
+                                 remap_grammar, serialize_grammar)
+
+
+def build(stream):
+    g = Sequitur()
+    for t in stream:
+        g.push(t)
+    return g
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(0, 7), max_size=200))
+def test_roundtrip_identity(stream):
+    g = build(stream)
+    assert g.expand() == stream
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 3), max_size=120))
+def test_serialized_expansion_matches(stream):
+    g = build(stream)
+    rules = parse_grammar(g.serialize())
+    assert list(expand_grammar(rules)) == stream
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(1, 9)),
+                max_size=60))
+def test_push_with_counts(runs):
+    g = Sequitur()
+    want = []
+    for t, n in runs:
+        g.push(t, n)
+        want.extend([t] * n)
+    assert g.expand() == want
+
+
+def test_nested_loop_constant_grammar():
+    """Paper Listing 2: m x (n writes + fsync) -> grammar size independent
+    of m and n (exponents absorb the counts)."""
+    def size(m, n):
+        g = Sequitur()
+        for _ in range(m):
+            for _ in range(n):
+                g.push(0)
+            g.push(1)
+        return len(g.serialize())
+
+    s = size(4, 6)
+    assert size(40, 6) <= s + 2       # exponent varint may add a byte
+    assert size(40, 600) <= s + 4
+    assert size(400, 600) <= s + 4
+
+
+def test_digram_uniqueness_and_utility():
+    import itertools
+    for stream in itertools.product(range(3), repeat=7):
+        g = build(list(stream))
+        assert g.expand() == list(stream), stream
+        # rule utility: every non-start rule used >= 2 times (or exp >= 2)
+        rules = g.rules()
+        for r in rules[1:]:
+            uses = sum(s.exp for s in _all_refs(g, r))
+            assert uses >= 2, (stream, repr(r))
+
+
+def _all_refs(g, rule):
+    out = []
+    for r in g.rules():
+        for s in r.body():
+            if s.rule is rule:
+                out.append(s)
+    return out
+
+
+def test_remap_grammar():
+    g = build([0, 1, 0, 1, 2])
+    remapped = remap_grammar(g.serialize(), {0: 5, 1: 7, 2: 9})
+    assert list(expand_grammar(parse_grammar(remapped))) == [5, 7, 5, 7, 9]
+
+
+def test_serialize_grammar_roundtrip():
+    g = build([0, 1, 2, 0, 1, 2, 0, 1, 2])
+    rules = parse_grammar(g.serialize())
+    assert parse_grammar(serialize_grammar(rules)) == rules
