@@ -8,21 +8,33 @@
                    analogue, call depths included), with independent or
                    collective (aggregator) I/O.
 
+``synth_rank_states`` -- a direct CST/CFG synthesizer for the
+                   finalize-scaling experiments: builds thousands of
+                   simulated rank states without running a Recorder per
+                   call (the per-rank grammar is structurally identical
+                   across ranks, so it is built once; only the
+                   rank-dependent offset signatures are re-encoded).
+
 Each driver runs ONE rank's call stream against a fresh Recorder (or a
 baseline adapter) and returns the tool's local state; the caller loops
-ranks and feeds ``finalize_ranks`` -- bit-identical to what rank 0 of a
-real MPI run computes after the gather (core/comm.py notes).
+ranks and feeds ``finalize_ranks`` (or ``tree_finalize_ranks``) --
+bit-identical to what rank 0 of a real MPI run computes after the gather
+(core/comm.py notes).
 """
 
 from __future__ import annotations
 
 import os
+import random
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.apis import framework as frame
 from repro.core.apis import posix, shardio
-from repro.core.interprocess import finalize_ranks
+from repro.core.encoding import Handle, encode_signature
+from repro.core.interprocess import finalize_ranks, tree_finalize_ranks
+from repro.core.patterns import IntraPatternTracker
 from repro.core.recorder import Recorder, RecorderConfig, attach, detach
+from repro.core.sequitur import Sequitur
 from repro.core.specs import REGISTRY
 
 
@@ -108,14 +120,95 @@ def _write_collective_file(path: str, rank: int, nprocs: int, *,
 
 
 # ---------------------------------------------------------------------------
+# synthetic rank states (finalize-scaling experiments)
+# ---------------------------------------------------------------------------
+
+
+def synth_rank_states(nprocs: int, *, n_groups: int = 32, n_calls: int = 64,
+                      pattern: str = "linear", chunk: int = 4096,
+                      seed: int = 0) -> Tuple[List[List[bytes]], List[bytes]]:
+    """Build (rank_csts, rank_cfgs) for ``nprocs`` simulated ranks directly.
+
+    Each rank performs, per group g (a distinct shared file), one pwrite at
+    ``base_g(rank)`` followed by ``n_calls - 1`` strided pwrites -- the IOR
+    shape.  ``pattern`` controls the inter-process structure of the bases:
+
+      linear     base = rank*chunk + g*BIG   (merges to one RankPattern)
+      constant   base = g*BIG                (identical on every rank)
+      irregular  base = random per (rank, g) (defeats the rank fit)
+      mixed      per-group random choice of the above
+
+    The per-rank grammar (CFG) is structurally identical across ranks, so
+    it is built once with run-length pushes; per rank only the distinct
+    offset-bearing signatures are re-encoded.  Offset encoding goes through
+    ``IntraPatternTracker.encode_many`` (the vectorized intra-process hot
+    loop): the O(calls) per-(rank, group) work is a NumPy pass, with only
+    O(groups) Python-level signature encodes per rank.
+    """
+    pw = REGISTRY.id_of("pwrite")
+    rng = random.Random(seed)
+    big = 1 << 24
+    stride = nprocs * chunk
+    plans = []  # per group: (kind, irregular per-rank bases or None)
+    for g in range(n_groups):
+        kind = pattern if pattern != "mixed" else rng.choice(
+            ["linear", "constant", "irregular"])
+        bases = ([rng.randrange(1 << 30) for _ in range(nprocs)]
+                 if kind == "irregular" else None)
+        plans.append((kind, bases))
+
+    # grammar: per group, [pwrite-head, pwrite-pattern^(n_calls-1)]; terminal
+    # ids are the same on every rank because the structure is
+    grammar = Sequitur()
+    t = 0
+    for g in range(n_groups):
+        grammar.push(t)          # head signature
+        t += 1
+        if n_calls > 1:
+            grammar.push(t, n_calls - 1)  # shared IterPattern signature
+            t += 1
+    cfg = grammar.serialize()
+
+    rank_csts: List[List[bytes]] = []
+    for r in range(nprocs):
+        tracker = IntraPatternTracker()
+        cst: List[bytes] = []
+        for g, (kind, bases) in enumerate(plans):
+            if kind == "linear":
+                base = r * chunk + g * big
+            elif kind == "constant":
+                base = g * big
+            else:
+                base = bases[r]
+            offs = [(base + i * stride,) for i in range(n_calls)]
+            enc = tracker.encode_many(("pwrite", g), offs)
+            # head + (single) pattern signature, matching the grammar above
+            cst.append(encode_signature(pw, 0, 0,
+                                        (Handle(g), 64, enc[0][0]), 64))
+            if n_calls > 1:
+                cst.append(encode_signature(pw, 0, 0,
+                                            (Handle(g), 64, enc[1][0]), 64))
+        rank_csts.append(cst)
+    return rank_csts, [cfg] * nprocs
+
+
+# ---------------------------------------------------------------------------
 # multi-rank simulation + size accounting
 # ---------------------------------------------------------------------------
 
 
 def run_ranks(workload, nprocs: int, recorder_config: RecorderConfig,
-              **kw) -> Dict[str, Any]:
+              finalize_topology: Optional[str] = None,
+              fit_mode: str = "vectorized", **kw) -> Dict[str, Any]:
     """Run ``workload(tool, rank, nprocs, **kw)`` for every simulated rank
-    with a fresh Recorder, then the inter-process stage; returns sizes."""
+    with a fresh Recorder, then the inter-process stage; returns sizes.
+
+    ``finalize_topology`` (default: honor
+    ``recorder_config.finalize_topology``) and ``fit_mode`` select the
+    finalize implementation (flat gather vs tree reduction, scalar vs
+    vectorized fitting); all combinations produce identical sizes."""
+    if finalize_topology is None:
+        finalize_topology = recorder_config.finalize_topology
     states = []
     n_records = 0
     for r in range(nprocs):
@@ -126,9 +219,11 @@ def run_ranks(workload, nprocs: int, recorder_config: RecorderConfig,
     csts = [s[0] for s in states]
     cfgs = [s[1] for s in states]
     ts = [s[2] for s in states]
-    merge, cfgres = finalize_ranks(
+    fin = (tree_finalize_ranks if finalize_topology == "tree"
+           else finalize_ranks)
+    merge, cfgres = fin(
         csts, cfgs, REGISTRY,
-        inter_patterns=recorder_config.inter_patterns)
+        inter_patterns=recorder_config.inter_patterns, fit_mode=fit_mode)
     cst_bytes = sum(len(e) + 2 for e in merge.merged_entries)
     cfg_bytes = sum(len(c) + 2 for c in cfgres.unique_cfgs)
     index_bytes = 2 * len(cfgres.cfg_index)

@@ -1,25 +1,43 @@
 """Communicator abstraction for the finalization collectives (paper §3.3).
 
-Recorder's inter-process compression needs gather (CSTs, CFGs to rank 0) and
-bcast (terminal remaps back out).  The original uses MPI; in a JAX framework
-the natural carrier is the host-process group.
+Recorder's inter-process compression needs gather (CSTs, CFGs to rank 0),
+bcast (terminal remaps back out) and -- for the scalable tree finalize --
+``reduce_tree``: a pairwise reduction over *adjacent rank* pairs that runs
+in ceil(log2(size)) rounds.  In round k (stride s = 2**k), every rank with
+``rank % 2s == s`` ships its accumulated value to ``rank - s``, which folds
+it with ``fn(left, right)``; after the last round rank 0 holds the full
+reduction.  ``fn`` must accept (lower-rank-block value, adjacent
+higher-rank-block value) -- Recorder passes
+``interprocess.merge_serialized_states``, so the values on the wire are
+opaque byte strings and any byte-transport backend can carry them.
+
+The original uses MPI; in a JAX framework the natural carrier is the
+host-process group.
 
 Implementations:
 
   SoloComm    single process (the common real-runtime case per host group
               of size 1, and the degenerate default).
   ThreadComm  N real threads with barrier semantics -- used in tests to
-              exercise the SPMD finalize path concurrently.
+              exercise the SPMD finalize path concurrently.  Implements the
+              true log-round ``reduce_tree`` schedule described above.
   JaxComm     documented adapter for real multi-host runs: gathers byte
               buffers with ``jax.experimental.multihost_utils`` primitives.
               On this single-host container it is constructible only with
               process_count == 1 (it asserts), but the call structure is the
-              deployment path.
+              deployment path.  ``reduce_tree`` on a real pod would ride on
+              point-to-point device transfers (or fall back to the generic
+              gather-based schedule below).
+
+The base class provides a generic ``reduce_tree`` built on ``gather``: rank
+0 collects every value and folds adjacent pairs level by level -- the same
+association order as the distributed schedule, so results are identical;
+only the communication pattern differs.
 
 Simulated large-scale ranks (the 16K-process experiments) do not go through
 a Comm at all: benchmarks call the pure functions in ``interprocess.py``
-directly on lists of rank states, which is bit-identical to what rank 0
-computes after a gather.
+directly on lists of rank states (``tree_finalize_ranks`` mirrors the
+collective's pairing exactly).
 """
 
 from __future__ import annotations
@@ -43,6 +61,22 @@ class Comm:
 
     def barrier(self) -> None:
         raise NotImplementedError
+
+    def reduce_tree(self, obj: Any, fn: Callable[[Any, Any], Any],
+                    root: int = 0) -> Optional[Any]:
+        """Pairwise tree reduction; root returns the folded value, other
+        ranks None.  Generic fallback: gather + fold adjacent pairs in
+        log-rounds at the root (same association order as the distributed
+        ThreadComm schedule, hence identical results)."""
+        gathered = self.gather(obj, root=root)
+        if gathered is None:
+            return None
+        items = list(gathered)
+        while len(items) > 1:
+            items = [fn(items[i], items[i + 1])
+                     if i + 1 < len(items) else items[i]
+                     for i in range(0, len(items), 2)]
+        return items[0]
 
 
 class SoloComm(Comm):
@@ -106,6 +140,25 @@ class ThreadComm(Comm):
     def barrier(self):
         self._w.barrier.wait()
 
+    def reduce_tree(self, obj, fn, root=0):
+        """True distributed log-round schedule: in round of stride s, rank
+        r with r % 2s == s sends to r - s, which folds; every rank walks
+        all rounds so the shared barrier stays aligned."""
+        assert root == 0, "tree reduction is rooted at rank 0"
+        val = obj
+        s = 1
+        while s < self.size:
+            sender = self.rank % (2 * s) == s
+            if sender:
+                self._w.slots[self.rank] = val
+            self._w.barrier.wait()
+            if (not sender and self.rank % (2 * s) == 0
+                    and self.rank + s < self.size):
+                val = fn(val, self._w.slots[self.rank + s])
+            self._w.barrier.wait()
+            s *= 2
+        return val if self.rank == 0 else None
+
 
 def run_thread_world(size: int, fn: Callable[[Comm, int], Any]) -> List[Any]:
     """Run ``fn(comm, rank)`` on ``size`` threads; returns per-rank results."""
@@ -138,9 +191,12 @@ class JaxComm(Comm):
     """Adapter for real multi-host deployments.
 
     The gather/bcast of variable-length byte buffers rides on
-    ``jax.experimental.multihost_utils.broadcast_one_to_all`` and
-    process-level allgather.  On a single-process runtime it degenerates to
-    SoloComm semantics, which is what this container exercises.
+    ``jax.experimental.multihost_utils`` primitives.  On a single-process
+    runtime it degenerates to SoloComm semantics, which is what this
+    container exercises.  ``reduce_tree`` inherits the generic gather-based
+    schedule; a real deployment would replace it with point-to-point sends
+    between host pairs (the states are plain byte strings, so any transport
+    works -- see DESIGN notes in the module docstring).
     """
 
     def __init__(self) -> None:

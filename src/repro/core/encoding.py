@@ -73,6 +73,17 @@ def read_svarint(buf: bytes, pos: int) -> Tuple[int, int]:
     return unzigzag(u), pos
 
 
+def write_blob(out: bytearray, b: bytes) -> None:
+    """Length-prefixed byte string (uvarint length + raw bytes)."""
+    write_uvarint(out, len(b))
+    out.extend(b)
+
+
+def read_blob(buf: bytes, pos: int) -> Tuple[bytes, int]:
+    n, pos = read_uvarint(buf, pos)
+    return bytes(buf[pos : pos + n]), pos + n
+
+
 def pack_uvarints(values: Iterable[int]) -> bytes:
     out = bytearray()
     for v in values:
@@ -134,6 +145,7 @@ _T_HANDLE = 7
 _T_ITERPAT = 8
 _T_RANKPAT = 9
 _T_TUPLE = 10
+_T_DICT = 11
 
 
 def encode_value(out: bytearray, v: Any) -> None:
@@ -173,6 +185,14 @@ def encode_value(out: bytearray, v: Any) -> None:
         out.append(_T_TUPLE)
         write_uvarint(out, len(v))
         for item in v:
+            encode_value(out, item)
+    elif isinstance(v, dict):
+        # insertion-order encoding: deterministic for deterministically
+        # built dicts (used by the tree-finalize state serialization)
+        out.append(_T_DICT)
+        write_uvarint(out, len(v))
+        for k, item in v.items():
+            encode_value(out, k)
             encode_value(out, item)
     else:
         # last resort: stringified (keeps tracing robust for odd arg types)
@@ -216,6 +236,14 @@ def decode_value(buf: bytes, pos: int) -> Tuple[Any, int]:
             item, pos = decode_value(buf, pos)
             items.append(item)
         return tuple(items), pos
+    if tag == _T_DICT:
+        n, pos = read_uvarint(buf, pos)
+        d = {}
+        for _ in range(n):
+            k, pos = decode_value(buf, pos)
+            item, pos = decode_value(buf, pos)
+            d[k] = item
+        return d, pos
     raise ValueError(f"bad value tag {tag} at {pos - 1}")
 
 

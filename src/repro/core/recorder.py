@@ -31,7 +31,9 @@ from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 from .comm import Comm, SoloComm
 from .cst import CST
 from .encoding import Handle
-from .interprocess import finalize_ranks
+from .interprocess import (deserialize_rank_state, finalize_ranks,
+                           make_rank_state, materialize_state,
+                           merge_serialized_states, serialize_rank_state)
 from .patterns import IntraPatternTracker
 from .sequitur import Sequitur
 from .specs import REGISTRY, FunctionRegistry, Role
@@ -48,6 +50,11 @@ class RecorderConfig:
     inter_patterns: bool = True              # paper §3.2.2 toggle (Fig 5)
     timestamps: bool = True
     store_buffers: bool = False              # record buffer lengths only
+    # "tree": hierarchical O(log N)-round reduction of serialized rank
+    # states (interprocess.merge_rank_states) through Comm.reduce_tree.
+    # "flat": the original gather-at-root pass, kept for bit-compat checks
+    # (both produce byte-identical traces; see tests/test_tree_finalize.py).
+    finalize_topology: str = "tree"
 
     @classmethod
     def from_env(cls, **overrides) -> "RecorderConfig":
@@ -63,6 +70,9 @@ class RecorderConfig:
             cfg.intra_patterns = False
         if os.environ.get("RECORDER_NO_INTER_PATTERNS"):
             cfg.inter_patterns = False
+        topo = os.environ.get("RECORDER_FINALIZE_TOPOLOGY")
+        if topo:
+            cfg.finalize_topology = topo
         return cfg
 
 
@@ -250,23 +260,49 @@ class Recorder:
     def finalize(self, comm: Optional[Comm] = None,
                  trace_dir: Optional[str] = None) -> Optional[RecorderStats]:
         """Run the inter-process stage and write the trace (root returns
-        stats; other ranks return None)."""
+        stats; other ranks return None).
+
+        ``config.finalize_topology`` selects how rank states reach rank 0:
+        ``"tree"`` reduces serialized states pairwise through
+        ``comm.reduce_tree`` in O(log N) rounds (each hop merges two
+        contiguous rank blocks, so rank 0 only materializes the already
+        merged state); ``"flat"`` gathers every raw CST/CFG to rank 0 and
+        merges there.  Both write byte-identical traces; timestamps are
+        per-rank payload either way and always travel by gather.
+        """
         if self._finalized:
             raise RuntimeError("recorder already finalized")
         self._finalized = True
         comm = comm or SoloComm()
         trace_dir = trace_dir or self.config.trace_dir
+        if self.config.finalize_topology not in ("tree", "flat"):
+            raise ValueError(
+                f"finalize_topology must be 'tree' or 'flat', got "
+                f"{self.config.finalize_topology!r}")
         entries, cfg, ts = self.local_state()
-        gathered = comm.gather((entries, cfg, ts))
-        if comm.rank != 0:
-            comm.barrier()
-            return None
-        rank_csts = [g[0] for g in gathered]
-        rank_cfgs = [g[1] for g in gathered]
-        rank_ts = [g[2] for g in gathered]
-        merge, cfgs = finalize_ranks(
-            rank_csts, rank_cfgs, self.registry,
-            inter_patterns=self.config.inter_patterns)
+        if self.config.finalize_topology == "tree":
+            leaf = make_rank_state(comm.rank, entries, cfg, self.registry)
+            blob = comm.reduce_tree(serialize_rank_state(leaf),
+                                    merge_serialized_states)
+            ts_gathered = comm.gather(ts)
+            if comm.rank != 0:
+                comm.barrier()
+                return None
+            rank_ts = ts_gathered
+            merge, cfgs = materialize_state(
+                deserialize_rank_state(blob),
+                inter_patterns=self.config.inter_patterns)
+        else:
+            gathered = comm.gather((entries, cfg, ts))
+            if comm.rank != 0:
+                comm.barrier()
+                return None
+            rank_csts = [g[0] for g in gathered]
+            rank_cfgs = [g[1] for g in gathered]
+            rank_ts = [g[2] for g in gathered]
+            merge, cfgs = finalize_ranks(
+                rank_csts, rank_cfgs, self.registry,
+                inter_patterns=self.config.inter_patterns)
         stats = RecorderStats(
             n_records=self.n_records,
             n_skipped=self.n_skipped,

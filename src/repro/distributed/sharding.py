@@ -25,6 +25,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
 
+
+def get_shard_map():
+    """Version-tolerant ``shard_map`` accessor.
+
+    ``jax.shard_map`` is the public name on new jax releases;  older ones
+    (<= 0.4.x) only ship ``jax.experimental.shard_map.shard_map``.  All
+    repo code (and test subprocess snippets) goes through this accessor.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm_exp
+
+    return sm_exp
+
+
+#: resolved once at import; usable as ``shard_map(f, mesh=..., ...)``
+shard_map = get_shard_map()
+
 LOGICAL_TO_PHYSICAL: Dict[str, Tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "tp": ("model",),

@@ -1,0 +1,273 @@
+"""Seeded-random fallback for the ``hypothesis`` property-testing API.
+
+The property suites import ``given`` / ``settings`` / ``strategies`` from
+``hypothesis`` when it is installed (see ``requirements-dev.txt``); in bare
+environments they fall back to this module, which implements the small
+strategy subset the tests use with deterministic seeded-random example
+generation.  No shrinking and no database -- just reproducible examples
+(the RNG is seeded from the test function's name) so the properties still
+execute everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+import random
+import string
+import zlib
+from typing import Any, Callable, List, Optional
+
+_DEFAULT_MAX_EXAMPLES = 100
+_TEXT_ALPHABET = (string.ascii_letters + string.digits + " _-/."
+                  + "éß中文☃")
+
+
+class SearchStrategy:
+    """Base strategy: ``example(rng)`` draws one value."""
+
+    def example(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def __or__(self, other: "SearchStrategy") -> "SearchStrategy":
+        mine = self._variants() if isinstance(self, _OneOf) else [self]
+        theirs = other._variants() if isinstance(other, _OneOf) else [other]
+        return _OneOf(mine + theirs)
+
+    def _variants(self) -> List["SearchStrategy"]:
+        return [self]
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, subs: List[SearchStrategy]):
+        self.subs = subs
+
+    def _variants(self) -> List[SearchStrategy]:
+        return list(self.subs)
+
+    def example(self, rng):
+        return rng.choice(self.subs).example(rng)
+
+
+class _Build(SearchStrategy):
+    def __init__(self, fn: Callable, args: tuple, kwargs: dict):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example(self, rng):
+        return self.fn(*(a.example(rng) for a in self.args),
+                       **{k: v.example(rng) for k, v in self.kwargs.items()})
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo: Optional[int], hi: Optional[int]):
+        self.lo = -(1 << 40) if lo is None else lo
+        self.hi = (1 << 40) if hi is None else hi
+
+    def example(self, rng):
+        # bias towards boundaries and small magnitudes (bug-rich corners)
+        r = rng.random()
+        if r < 0.1:
+            return rng.choice([self.lo, self.hi])
+        if r < 0.3:
+            v = rng.randint(-16, 16)
+            if self.lo <= v <= self.hi:
+                return v
+        if r < 0.5:
+            # log-uniform magnitude sweep
+            span = self.hi - self.lo
+            if span > 0:
+                bits = max(1, span.bit_length() - 1)
+                m = rng.randint(0, (1 << rng.randint(1, bits)) - 1)
+                v = self.lo + (m % (span + 1))
+                return v
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, allow_nan: bool = True, allow_infinity: bool = True):
+        self.allow_nan = allow_nan
+        self.allow_infinity = allow_infinity
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.05 and self.allow_nan:
+            return math.nan
+        if r < 0.1 and self.allow_infinity:
+            return rng.choice([math.inf, -math.inf])
+        if r < 0.3:
+            return rng.choice([0.0, -0.0, 1.0, -1.0, 0.5, 1e-9, 1e300,
+                               -1e300, 2.2250738585072014e-308])
+        if r < 0.6:
+            return rng.uniform(-1e6, 1e6)
+        # wide exponent sweep, always finite
+        m = rng.uniform(-1, 1)
+        e = rng.randint(-300, 300)
+        v = m * (10.0 ** e)
+        return v if math.isfinite(v) else m
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _Text(SearchStrategy):
+    def __init__(self, max_size: Optional[int]):
+        self.max_size = 20 if max_size is None else max_size
+
+    def example(self, rng):
+        n = rng.randint(0, self.max_size)
+        return "".join(rng.choice(_TEXT_ALPHABET) for _ in range(n))
+
+
+class _Binary(SearchStrategy):
+    def __init__(self, max_size: Optional[int]):
+        self.max_size = 20 if max_size is None else max_size
+
+    def example(self, rng):
+        return bytes(rng.randrange(256)
+                     for _ in range(rng.randint(0, self.max_size)))
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, subs: tuple):
+        self.subs = subs
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.subs)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem: SearchStrategy, min_size: int,
+                 max_size: Optional[int]):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = min_size + 20 if max_size is None else max_size
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options):
+        self.options = list(options)
+
+    def example(self, rng):
+        return rng.choice(self.options)
+
+
+class _Recursive(SearchStrategy):
+    def __init__(self, base: SearchStrategy, extend: Callable, max_leaves: int):
+        self.base = base
+        self.extend = extend
+        self.max_depth = max(1, min(4, max_leaves.bit_length() - 1))
+
+    def example(self, rng):
+        s = self.base
+        for _ in range(rng.randint(0, self.max_depth)):
+            s = self.extend(s)
+        return s.example(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (subset)."""
+
+    @staticmethod
+    def none():
+        return _Just(None)
+
+    @staticmethod
+    def just(value):
+        return _Just(value)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(allow_nan=True, allow_infinity=True):
+        return _Floats(allow_nan, allow_infinity)
+
+    @staticmethod
+    def text(max_size=None):
+        return _Text(max_size)
+
+    @staticmethod
+    def binary(max_size=None):
+        return _Binary(max_size)
+
+    @staticmethod
+    def builds(fn, *args, **kwargs):
+        return _Build(fn, args, kwargs)
+
+    @staticmethod
+    def tuples(*subs):
+        return _Tuples(subs)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=None):
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(options):
+        return _SampledFrom(options)
+
+    @staticmethod
+    def recursive(base, extend, max_leaves=16):
+        return _Recursive(base, extend, max_leaves)
+
+    @staticmethod
+    def one_of(*subs):
+        return _OneOf(list(subs))
+
+
+def given(*strats: SearchStrategy):
+    """Run the test once per generated example (seeded by test name)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                example = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *example, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (run {i}): {example!r}") from e
+
+        # hide the strategy-supplied (rightmost) parameters from pytest's
+        # fixture resolution; remaining leading params stay fixtures
+        params = list(inspect.signature(fn).parameters.values())
+        wrapper.__signature__ = inspect.Signature(
+            params[:max(0, len(params) - len(strats))])
+        del wrapper.__wrapped__
+        wrapper._max_examples = _DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Applied above ``given``: caps the number of generated examples."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -1,0 +1,10 @@
+"""Test bootstrap: make ``src`` (the package) and the repo root (the
+``benchmarks`` package) importable regardless of how pytest is invoked."""
+
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (os.path.join(_REPO, "src"), _REPO):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -2,7 +2,11 @@
 inter-process merge invariants."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback: seeded-random example generation
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.encoding import IterPattern, RankPattern
 from repro.core.interprocess import _fit_component, merge_csts, dedupe_cfgs

@@ -1,7 +1,11 @@
 """Sequitur (exponent-carrying) property + unit tests."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback: seeded-random example generation
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.sequitur import (Sequitur, expand_grammar, parse_grammar,
                                  remap_grammar, serialize_grammar)

@@ -16,7 +16,10 @@ from repro.optim import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
 from repro.train import StragglerDetector, Trainer, TrainerConfig
 
 CFG = get_smoke_config("qwen1.5-0.5b").replace(loss_chunk=0)
-DCFG = SyntheticConfig(vocab_size=CFG.vocab_size, seq_len=24, batch_size=4)
+# seeds pinned explicitly: batches are deterministic in (seed, step) and
+# params in TrainerConfig.seed, so runs are bit-reproducible
+DCFG = SyntheticConfig(vocab_size=CFG.vocab_size, seq_len=24, batch_size=4,
+                       seed=0)
 
 
 def _data(step):
@@ -25,12 +28,15 @@ def _data(step):
 
 def test_loss_decreases(tmp_path):
     tr = Trainer(CFG, TrainerConfig(num_steps=15, ckpt_dir=str(tmp_path),
-                                    ckpt_every=0),
+                                    ckpt_every=0, seed=0),
                  AdamWConfig(lr=1e-3, warmup_steps=3, total_steps=15),
                  data=_data)
     res = tr.run()
     assert res["final_step"] == 15
-    assert res["last_loss"] < tr.metrics_log[0]["loss"]
+    # each step sees a fresh batch, so endpoint losses are noisy; compare
+    # the mean of the last 3 against the mean of the first 3 instead
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
 
 
 def test_checkpoint_resume_continuity(tmp_path):

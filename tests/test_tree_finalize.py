@@ -1,0 +1,300 @@
+"""Tree-reduction finalize: byte-identity with the flat pass, state
+serialization, the ThreadComm collective path, reader round-trips, and the
+vectorized fitting / batched intra-pattern encoding equivalences."""
+
+import os
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback: seeded-random example generation
+    from _hypothesis_compat import given, settings, strategies as st
+
+from benchmarks.workloads import synth_rank_states
+from repro.core import trace_format
+from repro.core.comm import Comm, SoloComm, run_thread_world
+from repro.core.interprocess import (batch_fit_columns, deserialize_rank_state,
+                                     finalize_ranks, make_rank_state,
+                                     materialize_state, merge_rank_states,
+                                     merge_serialized_states,
+                                     serialize_rank_state,
+                                     tree_finalize_ranks, tree_reduce_states,
+                                     _fit_component)
+from repro.core.patterns import IntraPatternTracker
+from repro.core.reader import TraceReader
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+import repro.core.apis  # noqa: F401  (populate registry)
+
+
+def _assert_same_finalize(r1, r2):
+    m1, c1 = r1
+    m2, c2 = r2
+    assert m1.merged_entries == m2.merged_entries
+    assert m1.remaps == m2.remaps
+    assert m1.n_rank_patterns == m2.n_rank_patterns
+    assert c1.unique_cfgs == c2.unique_cfgs
+    assert c1.cfg_index == c2.cfg_index
+
+
+# ---------------------------------------------------------------------------
+# flat <-> tree byte-identity (the tentpole property)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64),
+       st.sampled_from(["linear", "constant", "irregular", "mixed"]),
+       st.integers(1, 6), st.integers(1, 8), st.integers(0, 2 ** 20))
+def test_tree_matches_flat_bytes(nranks, pattern, n_groups, n_calls, seed):
+    """tree_finalize_ranks output is identical to flat finalize_ranks for
+    randomized rank counts (incl. non-powers-of-two) and offset patterns."""
+    csts, cfgs = synth_rank_states(nranks, n_groups=n_groups,
+                                   n_calls=n_calls, pattern=pattern,
+                                   seed=seed)
+    for inter in (True, False):
+        flat = finalize_ranks(csts, cfgs, REGISTRY, inter_patterns=inter,
+                              fit_mode="python")
+        _assert_same_finalize(
+            flat, finalize_ranks(csts, cfgs, REGISTRY, inter_patterns=inter,
+                                 fit_mode="vectorized"))
+        _assert_same_finalize(
+            flat, tree_finalize_ranks(csts, cfgs, REGISTRY,
+                                      inter_patterns=inter))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 48), st.integers(1, 5), st.integers(0, 2 ** 20))
+def test_tree_matches_flat_with_partial_groups(nranks, n_groups, seed):
+    """Ranks with missing / extra entries (collective-I/O shape) still
+    merge identically."""
+    rng = random.Random(seed)
+    csts, cfgs = synth_rank_states(nranks, n_groups=n_groups, n_calls=4,
+                                   pattern="mixed", seed=seed)
+    csts = [list(c) for c in csts]
+    cfgs = list(cfgs)
+    # drop a suffix of terminals on a few ranks (and shrink their grammar)
+    from repro.core.sequitur import Sequitur
+    for r in rng.sample(range(nranks), max(1, nranks // 4)):
+        keep = rng.randrange(0, len(csts[r]))
+        csts[r] = csts[r][:keep]
+        g = Sequitur()
+        for t in range(keep):
+            g.push(t, rng.randrange(1, 4))
+        cfgs[r] = g.serialize()
+    _assert_same_finalize(
+        finalize_ranks(csts, cfgs, REGISTRY),
+        tree_finalize_ranks(csts, cfgs, REGISTRY))
+
+
+def test_tree_reduction_order_invariance():
+    """Sequential left-fold and pairwise-tree association produce identical
+    states (serialized bytes compared)."""
+    csts, cfgs = synth_rank_states(7, n_groups=3, n_calls=5, pattern="mixed",
+                                   seed=3)
+    leaves = [make_rank_state(r, csts[r], cfgs[r], REGISTRY)
+              for r in range(7)]
+    tree = tree_reduce_states([make_rank_state(r, csts[r], cfgs[r], REGISTRY)
+                               for r in range(7)])
+    fold = leaves[0]
+    for s in leaves[1:]:
+        fold = merge_rank_states(fold, s)
+    assert serialize_rank_state(tree) == serialize_rank_state(fold)
+
+
+def test_merge_requires_adjacent_blocks():
+    csts, cfgs = synth_rank_states(3, n_groups=1, n_calls=2)
+    s0, _, s2 = (make_rank_state(r, csts[r], cfgs[r], REGISTRY)
+                 for r in range(3))
+    with pytest.raises(ValueError):
+        merge_rank_states(s0, s2)
+
+
+# ---------------------------------------------------------------------------
+# state serialization (tree hops)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 16),
+       st.sampled_from(["linear", "constant", "irregular", "mixed"]),
+       st.integers(0, 2 ** 20))
+def test_state_serialization_roundtrip(nranks, pattern, seed):
+    csts, cfgs = synth_rank_states(nranks, n_groups=3, n_calls=6,
+                                   pattern=pattern, seed=seed)
+    root = tree_reduce_states([make_rank_state(r, csts[r], cfgs[r], REGISTRY)
+                               for r in range(nranks)])
+    blob = serialize_rank_state(root)
+    back = deserialize_rank_state(blob)
+    assert serialize_rank_state(back) == blob           # stable bytes
+    _assert_same_finalize(materialize_state(root), materialize_state(back))
+
+
+def test_merge_serialized_states_matches_object_merge():
+    csts, cfgs = synth_rank_states(4, n_groups=2, n_calls=5, seed=1)
+    leaves = [make_rank_state(r, csts[r], cfgs[r], REGISTRY)
+              for r in range(4)]
+    blob = merge_serialized_states(
+        merge_serialized_states(serialize_rank_state(leaves[0]),
+                                serialize_rank_state(leaves[1])),
+        merge_serialized_states(serialize_rank_state(leaves[2]),
+                                serialize_rank_state(leaves[3])))
+    obj = tree_reduce_states(leaves)
+    assert blob == serialize_rank_state(obj)
+
+
+# ---------------------------------------------------------------------------
+# Comm.reduce_tree + the SPMD finalize path (ThreadComm, multi-threaded)
+# ---------------------------------------------------------------------------
+
+
+def test_reduce_tree_solo_and_generic():
+    assert SoloComm().reduce_tree(b"x", lambda a, b: a + b) == b"x"
+
+    class ListComm(Comm):
+        rank, size = 0, 5
+
+        def gather(self, obj, root=0):
+            return [obj * (i + 1) for i in range(5)]
+
+    # fold of ["x","xx","xxx","xxxx","xxxxx"]: association-independent here
+    assert ListComm().reduce_tree("x", lambda a, b: a + b) == "x" * 15
+
+
+def _run_threaded(tmp_path, topology, nprocs=5, n_calls=24, chunk=512):
+    """N ranks on N threads; records are fed directly (the wrapper slot is
+    a process-global, shared across threads) and finalize runs through the
+    real ThreadComm collectives with the requested topology."""
+    trace_dir = str(tmp_path / f"trace_{topology}")
+    fid_seek = REGISTRY.id_of("lseek")
+    fid_write = REGISTRY.id_of("write")
+
+    def worker(comm, rank):
+        rec = Recorder(rank=rank, config=RecorderConfig(
+            finalize_topology=topology))
+        fd = object()
+        for i in range(n_calls):
+            off = rank * chunk + i * nprocs * chunk
+            rec.record(fid_seek, (fd, off, 0), off, 0, 2 * i, 2 * i + 1)
+            rec.record(fid_write, (fd, b"x" * 64), 64, 0, 2 * i + 1,
+                       2 * i + 2)
+        return rec.finalize(comm, trace_dir=trace_dir)
+
+    stats = run_thread_world(nprocs, worker)
+    assert stats[0] is not None
+    assert all(s is None for s in stats[1:])
+    return trace_dir
+
+
+def test_threadcomm_tree_trace_matches_flat(tmp_path):
+    """Concurrent tree finalize over ThreadComm writes byte-identical trace
+    files to the flat gather path."""
+    d_tree = _run_threaded(tmp_path, "tree")
+    d_flat = _run_threaded(tmp_path, "flat")
+    for name in ("merged_cst.bin", "unique_cfgs.bin", "cfg_index.bin"):
+        with open(os.path.join(d_tree, name), "rb") as f1, \
+                open(os.path.join(d_flat, name), "rb") as f2:
+            assert f1.read() == f2.read(), name
+
+
+def test_threadcomm_tree_nonpow2(tmp_path):
+    for nprocs in (3, 6, 7):
+        d = _run_threaded(tmp_path / str(nprocs), "tree", nprocs=nprocs)
+        r = TraceReader(d)
+        assert r.nranks == nprocs
+
+
+def test_reader_roundtrip_tree_finalized(tmp_path):
+    """TraceReader reconstructs every rank's exact offsets from a trace
+    finalized through the tree topology."""
+    nprocs, n_calls, chunk = 6, 30, 512
+    d = _run_threaded(tmp_path, "tree", nprocs=nprocs, n_calls=n_calls,
+                      chunk=chunk)
+    reader = TraceReader(d)
+    assert reader.nranks == nprocs
+    assert len(reader.unique_cfgs) == 1    # identical SPMD ranks deduped
+    for r in range(nprocs):
+        offs = [rec.arg("offset") for rec in reader.iter_records(r)
+                if rec.func == "lseek"]
+        assert offs == [r * chunk + i * nprocs * chunk
+                        for i in range(n_calls)]
+
+
+def test_recorder_env_topology(monkeypatch):
+    monkeypatch.setenv("RECORDER_FINALIZE_TOPOLOGY", "flat")
+    assert RecorderConfig.from_env().finalize_topology == "flat"
+    monkeypatch.delenv("RECORDER_FINALIZE_TOPOLOGY")
+    assert RecorderConfig.from_env().finalize_topology == "tree"
+
+
+# ---------------------------------------------------------------------------
+# vectorized fitting / batched intra-pattern encoding equivalences
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.lists(st.integers(-2 ** 40, 2 ** 40), min_size=3,
+                         max_size=6), max_size=8))
+def test_batch_fit_matches_scalar(cols):
+    cols = [c for c in cols if len(c) == len(cols[0])] if cols else []
+    assert batch_fit_columns(cols) == [_fit_component(c) for c in cols]
+
+
+def test_batch_fit_bigint_fallback():
+    cols = [[1 << 70, (1 << 70) + 5, (1 << 70) + 10], [7, 7, 7]]
+    assert batch_fit_columns(cols) == [_fit_component(c) for c in cols]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 20), max_size=50), st.integers(1, 3),
+       st.integers(0, 2 ** 20))
+def test_encode_many_matches_sequential(vals, arity, seed):
+    rng = random.Random(seed)
+    rows = []
+    i = 0
+    while i < len(vals):
+        if rng.random() < 0.5:    # splice in an arithmetic run
+            a, n = rng.randrange(0, 4096), rng.randrange(1, 8)
+            rows.extend(tuple(vals[i] + j * a + s for s in range(arity))
+                        for j in range(n))
+        else:
+            rows.append(tuple(vals[i] + s for s in range(arity)))
+        i += 1
+    seq, bat = IntraPatternTracker(), IntraPatternTracker()
+    out_seq = [seq.encode("k", r) for r in rows]
+    out_bat = bat.encode_many("k", rows)
+    assert out_seq == out_bat
+    rs, rb = seq._runs.get("k"), bat._runs.get("k")
+    assert (rs is None) == (rb is None)
+    if rs is not None:
+        assert (rs.index, rs.base, rs.stride) == (rb.index, rb.base, rb.stride)
+
+
+def test_encode_many_continues_existing_run():
+    seq, bat = IntraPatternTracker(), IntraPatternTracker()
+    head = [(0,), (8,)]
+    tail = [(16,), (24,), (99,), (100,)]
+    for r in head:
+        assert seq.encode("k", r) == bat.encode("k", r)
+    assert [seq.encode("k", r) for r in tail] == bat.encode_many("k", tail)
+
+
+# ---------------------------------------------------------------------------
+# scaling sanity: merged state stays O(groups) for SPMD rank blocks
+# ---------------------------------------------------------------------------
+
+
+def test_tree_state_constant_in_ranks():
+    small = tree_reduce_states(
+        [make_rank_state(r, *rc, REGISTRY) for r, rc in
+         enumerate(zip(*synth_rank_states(8, n_groups=4, n_calls=8)))])
+    big = tree_reduce_states(
+        [make_rank_state(r, *rc, REGISTRY) for r, rc in
+         enumerate(zip(*synth_rank_states(128, n_groups=4, n_calls=8)))])
+    assert len(big.streams) == len(small.streams) == 1
+    assert len(big.groups) == len(small.groups)
+    # serialized state grows only by the per-rank stream index varints
+    assert len(serialize_rank_state(big)) <= \
+        len(serialize_rank_state(small)) + 2 * (128 - 8) + 16
