@@ -1,0 +1,250 @@
+"""Read-side scaling: record iterator vs compressed-domain TraceView.
+
+The write side keeps traces ~constant in scale (paper Section 5); this
+experiment shows the READ side exploiting that: grammar-weighted aggregates
+(``io_summary``, ``size_histogram``, ``n_records``) answer in
+O(|grammar| + |CST|) from the compressed representation, while the seed
+iterator pays O(total records) of per-record Python work.
+
+Sweeps records-per-rank x ranks x {iterator, view} over synthesized traces
+(``workloads.synth_rank_states`` -> tree finalize -> on-disk trace).  The
+iterator path is timed on a bounded rank sample (``iter_budget`` expanded
+records per query) and extrapolated linearly to the full rank count when
+the sample is partial -- every row records ``iterator_ranks_timed`` /
+``iterator_extrapolated`` alongside the raw measurement, and rows whose
+iterator pass covered ALL ranks also record ``value_match`` (query results
+compared for exact equality).  The ``mixed_all`` points exercise the
+nested IterPattern-of-RankPattern and multi-offset (lseek) shapes.
+
+Writes artifacts/bench/reader_scaling.json:
+  {"config": ..., "rows": [...]}, one row per
+  (records_per_rank, nranks, pattern, query) with iterator_s, view_s
+  (= build + query) and speedup = iterator_s / view_s.
+
+    PYTHONPATH=src python -m benchmarks.reader_scaling [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.core import trace_format
+from repro.core.interprocess import tree_finalize_ranks
+from repro.core.reader import TraceReader
+from repro.core.sequitur import expand_grammar
+from repro.core.specs import REGISTRY
+from repro.core.traceview import _DATA_FUNCS, TraceView
+
+from .workloads import synth_rank_states
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+_EDGES = (512, 4096, 65536, 1 << 20)
+
+
+# ---------------------------------------------------------------------------
+# the seed per-record reference path (restricted to a rank subset so large
+# sweep points stay measurable; extrapolation is recorded, never hidden)
+# ---------------------------------------------------------------------------
+
+
+def _size_of(rec) -> int:
+    for v, role in zip(rec.args, rec.roles):
+        if role in ("buf", "size") and isinstance(v, int):
+            return v
+    return rec.ret if isinstance(rec.ret, int) else 0
+
+
+def iter_io_summary(reader: TraceReader, ranks: Sequence[int]
+                    ) -> Dict[str, Any]:
+    """The seed iterator io_summary over the given ranks."""
+    from collections import defaultdict
+    per_file: Dict[Any, Dict[str, int]] = defaultdict(
+        lambda: {"bytes": 0, "calls": 0})
+    handles: Dict[Tuple[int, int], str] = {}
+    n_meta = n_data = 0
+    t_lo, t_hi = float("inf"), 0
+    total_bytes = 0
+    for r in ranks:
+        for rec in reader.iter_records(r):
+            if rec.func in ("open", "shard_open"):
+                h = rec.ret
+                if hasattr(h, "id"):
+                    handles[(r, h.id)] = str(rec.args[0])
+            if rec.func in _DATA_FUNCS:
+                n_data += 1
+                sz = _size_of(rec)
+                total_bytes += sz
+                key = next((handles.get((r, v.id)) for v, role in
+                            zip(rec.args, rec.roles)
+                            if role == "handle" and hasattr(v, "id")), "?")
+                per_file[key]["bytes"] += sz
+                per_file[key]["calls"] += 1
+            elif rec.layer in ("posix", "shardio"):
+                n_meta += 1
+            if rec.t_entry is not None:
+                t_lo = min(t_lo, rec.t_entry)
+                t_hi = max(t_hi, rec.t_exit or rec.t_entry)
+    wall_us = max(t_hi - t_lo, 1)
+    return {
+        "files": dict(per_file),
+        "n_data_calls": n_data,
+        "n_metadata_calls": n_meta,
+        "metadata_ratio": n_meta / max(n_data + n_meta, 1),
+        "total_bytes": total_bytes,
+        "aggregate_MBps": total_bytes / wall_us,
+    }
+
+
+def iter_size_histogram(reader: TraceReader, ranks: Sequence[int],
+                        edges=_EDGES) -> Dict[str, int]:
+    """The seed iterator size_histogram over the given ranks."""
+    buckets = {f"<{e}": 0 for e in edges}
+    buckets[f">={edges[-1]}"] = 0
+    for r in ranks:
+        for rec in reader.iter_records(r, timestamps=False):
+            if rec.func not in _DATA_FUNCS:
+                continue
+            sz = _size_of(rec)
+            for e in edges:
+                if sz < e:
+                    buckets[f"<{e}"] += 1
+                    break
+            else:
+                buckets[f">={edges[-1]}"] += 1
+    return buckets
+
+
+def iter_n_records(reader: TraceReader, ranks: Sequence[int]) -> int:
+    """The seed expand-and-count n_records over the given ranks."""
+    total = 0
+    for r in ranks:
+        g = reader.unique_cfgs[reader.cfg_index[r]]
+        for _ in expand_grammar(g):
+            total += 1
+    return total
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+
+
+def _build_trace(records_per_rank: int, nranks: int, pattern: str,
+                 n_groups: int, tmp: str) -> str:
+    n_calls = max(1, records_per_rank // n_groups)
+    csts, cfgs = synth_rank_states(nranks, n_groups=n_groups,
+                                   n_calls=n_calls, pattern=pattern)
+    merge, cfgres = tree_finalize_ranks(csts, cfgs, REGISTRY)
+    d = os.path.join(tmp, f"trace_{records_per_rank}_{nranks}_{pattern}")
+    trace_format.write_trace(d, registry=REGISTRY,
+                             merged_cst=merge.merged_entries,
+                             unique_cfgs=cfgres.unique_cfgs,
+                             cfg_index=cfgres.cfg_index,
+                             rank_timestamps=[b""] * nranks, meta_extra={})
+    return d
+
+
+def _timed(fn) -> Tuple[float, Any]:
+    t0 = time.perf_counter()
+    res = fn()
+    return time.perf_counter() - t0, res
+
+
+def sweep(records_per_rank_list: Sequence[int], nranks_list: Sequence[int],
+          patterns: Sequence[str] = ("linear",), n_groups: int = 16,
+          iter_budget: int = 1_000_000) -> List[dict]:
+    rows: List[dict] = []
+    tmp = tempfile.mkdtemp(prefix="reader_scaling_")
+    try:
+        for pattern in patterns:
+            for rpr in records_per_rank_list:
+                for nranks in nranks_list:
+                    d = _build_trace(rpr, nranks, pattern, n_groups, tmp)
+                    reader = TraceReader(d)
+                    # pre-build the reader's memoized view so the iterator
+                    # timings (reader.iter_records delegates to it) don't
+                    # pay the columnar decode; the view path is timed on
+                    # fresh TraceView instances (cold build_s + query)
+                    reader.view()
+                    build_s, _ = _timed(lambda: TraceView(reader))
+                    n_sample = max(1, min(nranks, iter_budget // max(rpr, 1)))
+                    sample = list(range(n_sample))
+                    full = n_sample == nranks
+                    queries = [
+                        ("io_summary",
+                         lambda v: v.io_summary(),
+                         lambda: iter_io_summary(reader, sample)),
+                        ("size_histogram",
+                         lambda v: v.size_histogram(_EDGES),
+                         lambda: iter_size_histogram(reader, sample)),
+                        ("n_records",
+                         lambda v: sum(v.n_records(r)
+                                       for r in range(nranks)),
+                         lambda: iter_n_records(reader, sample)),
+                    ]
+                    for qname, vq, iq in queries:
+                        view = TraceView(reader)  # fresh memos per query
+                        view_q_s, vres = _timed(lambda: vq(view))
+                        it_meas_s, ires = _timed(iq)
+                        it_s = it_meas_s * (nranks / n_sample)
+                        view_s = build_s + view_q_s
+                        row = {
+                            "records_per_rank": rpr, "nranks": nranks,
+                            "pattern": pattern, "query": qname,
+                            "n_records_total": rpr * nranks,
+                            "iterator_s": it_s,
+                            "iterator_s_measured": it_meas_s,
+                            "iterator_ranks_timed": n_sample,
+                            "iterator_extrapolated": not full,
+                            "view_build_s": build_s,
+                            "view_query_s": view_q_s,
+                            "view_s": view_s,
+                            "speedup": it_s / max(view_s, 1e-9),
+                        }
+                        if full:
+                            row["value_match"] = bool(vres == ires)
+                        rows.append(row)
+                    shutil.rmtree(d, ignore_errors=True)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def main(fast: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    if fast:
+        rows = sweep((2_000, 8_000), (4, 16),
+                     patterns=("linear", "mixed_all"), iter_budget=200_000)
+    else:
+        rows = sweep((10_000, 100_000, 1_000_000), (16, 256),
+                     patterns=("linear",))
+        rows += sweep((10_000,), (16,), patterns=("mixed_all",))
+    out = {"config": {"fast": fast, "edges": list(_EDGES)}, "rows": rows}
+    with open(os.path.join(ART, "reader_scaling.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    peak = max(rows, key=lambda r: r["n_records_total"])
+    lines = []
+    for q in ("io_summary", "size_histogram", "n_records"):
+        r = next(r for r in rows
+                 if r["query"] == q
+                 and r["n_records_total"] == peak["n_records_total"]
+                 and r["pattern"] == peak["pattern"])
+        lines.append(
+            f"reader_scaling,{q},records={r['n_records_total']},"
+            f"iterator_s={r['iterator_s']:.3f},view_s={r['view_s']:.6f},"
+            f"speedup={r['speedup']:.0f}x")
+    mism = [r for r in rows if r.get("value_match") is False]
+    lines.append(f"reader_scaling,value_mismatches={len(mism)}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main(fast="--smoke" in sys.argv or "--fast" in sys.argv):
+        print(line)

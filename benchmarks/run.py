@@ -17,6 +17,10 @@ def main() -> None:
     from . import flash_scaling, ior_pattern, kernel_bench, overhead, \
         tool_comparison
 
+    # reader_scaling is intentionally NOT in this list: CI runs it as its
+    # own `python -m benchmarks.reader_scaling --smoke` step (and the full
+    # sweep is a standalone run), so including it here would time the same
+    # sweep twice per CI run.
     print("experiment,summary")
     for name, mod in (("ior_pattern", ior_pattern),
                       ("flash_scaling", flash_scaling),

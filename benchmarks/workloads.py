@@ -136,7 +136,14 @@ def synth_rank_states(nprocs: int, *, n_groups: int = 32, n_calls: int = 64,
       linear     base = rank*chunk + g*BIG   (merges to one RankPattern)
       constant   base = g*BIG                (identical on every rank)
       irregular  base = random per (rank, g) (defeats the rank fit)
-      mixed      per-group random choice of the above
+      nested     rank-linear base AND rank-linear stride: the group merges
+                 to ``IterPattern(RankPattern, RankPattern)`` -- the
+                 doubly-nested shape of paper Fig 3(c)
+      multi      lseek groups whose OFFSET-role argument and OFFSET-role
+                 return are tracked as one joint two-component run
+      mixed      per-group random choice of linear/constant/irregular
+                 (the original set, kept bit-stable for old seeds)
+      mixed_all  per-group random choice across all five kinds
 
     The per-rank grammar (CFG) is structurally identical across ranks, so
     it is built once with run-length pushes; per rank only the distinct
@@ -146,13 +153,18 @@ def synth_rank_states(nprocs: int, *, n_groups: int = 32, n_calls: int = 64,
     O(groups) Python-level signature encodes per rank.
     """
     pw = REGISTRY.id_of("pwrite")
+    lk = REGISTRY.id_of("lseek")
     rng = random.Random(seed)
     big = 1 << 24
     stride = nprocs * chunk
     plans = []  # per group: (kind, irregular per-rank bases or None)
     for g in range(n_groups):
-        kind = pattern if pattern != "mixed" else rng.choice(
-            ["linear", "constant", "irregular"])
+        kind = pattern
+        if pattern == "mixed":
+            kind = rng.choice(["linear", "constant", "irregular"])
+        elif pattern == "mixed_all":
+            kind = rng.choice(["linear", "constant", "irregular",
+                               "nested", "multi"])
         bases = ([rng.randrange(1 << 30) for _ in range(nprocs)]
                  if kind == "irregular" else None)
         plans.append((kind, bases))
@@ -174,13 +186,29 @@ def synth_rank_states(nprocs: int, *, n_groups: int = 32, n_calls: int = 64,
         tracker = IntraPatternTracker()
         cst: List[bytes] = []
         for g, (kind, bases) in enumerate(plans):
-            if kind == "linear":
-                base = r * chunk + g * big
-            elif kind == "constant":
+            if kind == "constant":
                 base = g * big
-            else:
+            elif kind == "irregular":
                 base = bases[r]
-            offs = [(base + i * stride,) for i in range(n_calls)]
+            else:  # linear / nested / multi: rank-linear base
+                base = r * chunk + g * big
+            # nested: the stride itself is rank-linear (paper Fig 3c)
+            step = (nprocs + r) * chunk if kind == "nested" else stride
+            if kind == "multi":
+                # lseek: OFFSET-role arg and OFFSET-role return form one
+                # joint two-component run (tracked and decoded together)
+                offs = [(base + i * step, base + i * step)
+                        for i in range(n_calls)]
+                enc = tracker.encode_many(("lseek", g), offs)
+                cst.append(encode_signature(lk, 0, 0,
+                                            (Handle(g), enc[0][0], 0),
+                                            enc[0][1]))
+                if n_calls > 1:
+                    cst.append(encode_signature(lk, 0, 0,
+                                                (Handle(g), enc[1][0], 0),
+                                                enc[1][1]))
+                continue
+            offs = [(base + i * step,) for i in range(n_calls)]
             enc = tracker.encode_many(("pwrite", g), offs)
             # head + (single) pattern signature, matching the grammar above
             cst.append(encode_signature(pw, 0, 0,

@@ -11,149 +11,67 @@ entry/exit times:
   overlap_ratio     asynchronous-I/O overlap between threads (Section 2.2)
   consistency_pairs conflicting (overlapping, cross-rank) write extents --
                     the file-system consistency-semantics study [27, 28]
+
+All five run on :class:`repro.core.traceview.TraceView` -- the
+compressed-domain columnar query layer -- so the aggregates are
+grammar-weighted sums over distinct signatures (O(|grammar| + |CST|)) and
+the sequential analyses cost one stream walk per *unique CFG* instead of a
+per-record Python iteration per rank.  Results are value-identical to the
+record-iterator path (property-tested in ``tests/test_traceview.py``),
+with one deliberate fix: ``consistency_pairs`` now reports ALL overlapping
+cross-rank pairs via an active-interval sweep, where the seed's
+adjacent-pair scan dropped conflicts between non-adjacent spans.
 """
 
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Union
 
-from .reader import Record, TraceReader
+from .reader import TraceReader
+from .traceview import _DATA_FUNCS, TraceView, sweep_conflicts  # noqa: F401
 
-_DATA_FUNCS = {"pwrite", "write", "pread", "read", "shard_write_at",
-               "shard_read_at"}
-
-
-def _size_of(rec: Record) -> int:
-    for name, v, role in zip(rec.arg_names, rec.args, rec.roles):
-        if role in ("buf", "size") and isinstance(v, int):
-            return v
-    return rec.ret if isinstance(rec.ret, int) else 0
+Readable = Union[TraceReader, TraceView]
 
 
-def _offset_of(rec: Record) -> Optional[int]:
-    for v, role in zip(rec.args, rec.roles):
-        if role == "offset" and isinstance(v, int):
-            return v
-    return None
+def _view(reader: Readable) -> TraceView:
+    return reader if isinstance(reader, TraceView) else reader.view()
 
 
-def io_summary(reader: TraceReader) -> Dict[str, Any]:
+def io_summary(reader: Readable) -> Dict[str, Any]:
     """Aggregate transfer sizes, call mix, and per-rank bandwidth."""
-    per_file: Dict[Any, Dict[str, int]] = defaultdict(
-        lambda: {"bytes": 0, "calls": 0})
-    handles: Dict[Tuple[int, int], str] = {}
-    n_meta = n_data = 0
-    t_lo, t_hi = float("inf"), 0
-    total_bytes = 0
-    for r, rec in reader.all_records():
-        if rec.func in ("open", "shard_open"):
-            h = rec.ret
-            if hasattr(h, "id"):
-                handles[(r, h.id)] = str(rec.args[0])
-        if rec.func in _DATA_FUNCS:
-            n_data += 1
-            sz = _size_of(rec)
-            total_bytes += sz
-            key = next((handles.get((r, v.id)) for v, role in
-                        zip(rec.args, rec.roles)
-                        if role == "handle" and hasattr(v, "id")), "?")
-            per_file[key]["bytes"] += sz
-            per_file[key]["calls"] += 1
-        elif rec.layer in ("posix", "shardio"):
-            n_meta += 1
-        if rec.t_entry is not None:
-            t_lo = min(t_lo, rec.t_entry)
-            t_hi = max(t_hi, rec.t_exit or rec.t_entry)
-    wall_us = max(t_hi - t_lo, 1)
-    return {
-        "files": dict(per_file),
-        "n_data_calls": n_data,
-        "n_metadata_calls": n_meta,
-        "metadata_ratio": n_meta / max(n_data + n_meta, 1),
-        "total_bytes": total_bytes,
-        "aggregate_MBps": total_bytes / wall_us,  # bytes/us == MB/s
-    }
+    return _view(reader).io_summary()
 
 
-def size_histogram(reader: TraceReader,
+def size_histogram(reader: Readable,
                    edges=(512, 4096, 65536, 1 << 20)) -> Dict[str, int]:
     """Request-size distribution of data calls."""
-    buckets = {f"<{e}": 0 for e in edges}
-    buckets[f">={edges[-1]}"] = 0
-    for _, rec in reader.all_records(timestamps=False):
-        if rec.func not in _DATA_FUNCS:
-            continue
-        sz = _size_of(rec)
-        for e in edges:
-            if sz < e:
-                buckets[f"<{e}"] += 1
-                break
-        else:
-            buckets[f">={edges[-1]}"] += 1
-    return buckets
+    return _view(reader).size_histogram(edges)
 
 
-def call_chains(reader: TraceReader, targets=_DATA_FUNCS,
+def call_chains(reader: Readable, targets=_DATA_FUNCS,
                 rank: int = 0) -> Dict[str, int]:
     """Cross-layer call chains ending in a data op (uses call depth).
 
     Records are emitted at call COMPLETION (children before parents), so
-    the stream is post-order; walking it in reverse yields parents first
-    and the depth-indexed stack reconstructs each ancestry chain."""
-    chains: Dict[str, int] = defaultdict(int)
-    stack: List[str] = []
-    for rec in reversed(list(reader.iter_records(rank, timestamps=False))):
-        del stack[rec.depth:]
-        stack.append(rec.func)
-        if rec.func in targets:
-            chains["->".join(stack)] += 1
-    return dict(chains)
+    the stream is post-order; the view streams it in reverse straight from
+    the grammar -- parents first, without materializing the forward record
+    list -- and the depth-indexed stack reconstructs each ancestry chain."""
+    return _view(reader).call_chains(targets, rank=rank)
 
 
-def overlap_ratio(reader: TraceReader, rank: int = 0) -> float:
+def overlap_ratio(reader: Readable, rank: int = 0) -> float:
     """Fraction of traced I/O time where >= 2 threads were inside calls
     simultaneously (asynchronous-I/O overlap, paper Section 2.2)."""
-    events = []
-    for rec in reader.iter_records(rank):
-        if rec.t_entry is None or rec.t_exit is None:
-            continue
-        events.append((rec.t_entry, 1))
-        events.append((rec.t_exit, -1))
-    if not events:
-        return 0.0
-    events.sort()
-    busy = overlap = 0
-    depth = 0
-    last = events[0][0]
-    for t, d in events:
-        if depth >= 1:
-            busy += t - last
-        if depth >= 2:
-            overlap += t - last
-        depth += d
-        last = t
-    return overlap / busy if busy else 0.0
+    return _view(reader).overlap_ratio(rank)
 
 
-def consistency_pairs(reader: TraceReader) -> List[Dict[str, Any]]:
+def consistency_pairs(reader: Readable) -> List[Dict[str, Any]]:
     """Cross-rank overlapping write extents per file handle id: the cases
-    whose ordering a file system's consistency model must define."""
-    writes: Dict[int, List[Tuple[int, int, int]]] = defaultdict(list)
-    for r, rec in reader.all_records(timestamps=False):
-        if rec.func not in ("pwrite", "shard_write_at"):
-            continue
-        off = _offset_of(rec)
-        if off is None:
-            continue
-        writes[next((v.id for v, role in zip(rec.args, rec.roles)
-                     if role == "handle" and hasattr(v, "id")), -1)] \
-            .append((r, off, off + _size_of(rec)))
-    conflicts = []
-    for hid, spans in writes.items():
-        spans.sort(key=lambda s: s[1])
-        for (r1, a1, b1), (r2, a2, b2) in zip(spans, spans[1:]):
-            if r1 != r2 and a2 < b1:
-                conflicts.append({"handle": hid, "ranks": (r1, r2),
-                                  "extent": (a2, min(b1, b2))})
-    return conflicts
+    whose ordering a file system's consistency model must define.
+
+    Uses an active-interval sweep (:func:`traceview.sweep_conflicts`), so a
+    long extent is checked against EVERY later overlapping span -- the
+    seed's adjacent-pair scan missed e.g. rank 0 writing [0, 100) against
+    rank 2 writing [30, 40) whenever rank 1 wrote in between.
+    """
+    return _view(reader).consistency_pairs()

@@ -9,19 +9,20 @@ post-processing support):
   RankPattern values      -> resolved with the reader's rank
   IterPattern values      -> resolved with a per-pattern-key run counter
                              (exact mirror of the runtime tracker)
+
+The record-expansion methods here are thin compatibility shims over
+:class:`repro.core.traceview.TraceView` (``self.view()``), which holds the
+batch-decoded columns and answers aggregate queries straight from the
+compressed representation -- prefer it for analysis work.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Iterator, List, Optional, Tuple
 
-import numpy as np
-
-from .encoding import Handle, IterPattern, RankPattern, decode_signature
-from .patterns import IntraPatternDecoder
-from .sequitur import expand_grammar, parse_grammar
-from .timestamps import decompress_timestamps
+from .encoding import IterPattern, RankPattern
+from .sequitur import parse_grammar
 from .trace_format import read_trace_files
 
 
@@ -62,66 +63,25 @@ class TraceReader:
         self.rank_ts = data["rank_timestamps"]
         self.functions = {int(k): v for k, v in self.meta["functions"].items()}
         self.nranks = self.meta["nranks"]
-        # decode each CST entry once
-        self._decoded = [decode_signature(sig) for sig in self.merged_cst]
+        self._view = None
+
+    def view(self) -> "TraceView":  # noqa: F821  (lazy import below)
+        """The compressed-domain columnar query API over this trace
+        (:class:`repro.core.traceview.TraceView`), built once, memoized."""
+        if self._view is None:
+            from .traceview import TraceView
+            self._view = TraceView(self)
+        return self._view
 
     def n_records(self, rank: int) -> int:
-        total = 0
-        for _ in expand_grammar(self.unique_cfgs[self.cfg_index[rank]]):
-            total += 1
-        return total
+        """O(|grammar|) record count from rule expansion weights -- the
+        seed expand-and-count loop is gone."""
+        return self.view().n_records(rank)
 
     def iter_records(self, rank: int, timestamps: bool = True
                      ) -> Iterator[Record]:
-        grammar = self.unique_cfgs[self.cfg_index[rank]]
-        decoder = IntraPatternDecoder()
-        ts: Optional[np.ndarray] = None
-        if timestamps and rank < len(self.rank_ts) and self.rank_ts[rank]:
-            ts = decompress_timestamps(self.rank_ts[rank])
-        for i, terminal in enumerate(expand_grammar(grammar)):
-            func_id, tidx, depth, args, ret = self._decoded[terminal]
-            finfo = self.functions[func_id]
-            roles = finfo["arg_roles"]
-            # resolve rank patterns everywhere
-            args = tuple(_resolve_rank(a, rank) for a in args)
-            ret = _resolve_rank(ret, rank)
-            # resolve iteration patterns on OFFSET-role slots (and returns)
-            off_slots = [j for j, r in enumerate(roles) if r == "offset"
-                         and j < len(args)]
-            ret_is_offset = (finfo["ret_role"] == "offset"
-                             and isinstance(ret, (int, IterPattern)))
-            if off_slots or ret_is_offset:
-                handle_ids: List[int] = []
-                keyparts: List[Any] = []
-                for j, a in enumerate(args):
-                    role = roles[j] if j < len(roles) else "val"
-                    if role == "offset":
-                        continue
-                    if isinstance(a, Handle):
-                        handle_ids.append(a.id)
-                    else:
-                        keyparts.append(a)
-                key_ret = None if ret_is_offset else (
-                    ("h", ret.id) if isinstance(ret, Handle) else ret)
-                key = (func_id, tidx, tuple(handle_ids), tuple(keyparts), key_ret)
-                enc = [args[j] for j in off_slots]
-                if ret_is_offset:
-                    enc.append(ret)
-                dec = decoder.decode(key, enc)
-                args = list(args)
-                for j, v in zip(off_slots, dec):
-                    args[j] = v
-                args = tuple(args)
-                if ret_is_offset:
-                    ret = dec[-1]
-            t0 = int(ts[i, 0]) if ts is not None else None
-            t1 = int(ts[i, 1]) if ts is not None else None
-            yield Record(func=finfo["name"], layer=finfo["layer"], args=args,
-                         arg_names=tuple(finfo["arg_names"]), ret=ret,
-                         thread=tidx, depth=depth, t_entry=t0, t_exit=t1,
-                         roles=tuple(roles))
+        return self.view().iter_records(rank, timestamps=timestamps)
 
-    def all_records(self, timestamps: bool = True) -> Iterator[Tuple[int, Record]]:
-        for r in range(self.nranks):
-            for rec in self.iter_records(r, timestamps=timestamps):
-                yield r, rec
+    def all_records(self, timestamps: bool = True
+                    ) -> Iterator[Tuple[int, Record]]:
+        return self.view().all_records(timestamps=timestamps)

@@ -379,6 +379,155 @@ def expand_grammar(rules: List[List[Tuple[int, int]]]) -> Iterator[int]:
             yield code >> 1
 
 
+def expand_grammar_reversed(rules: List[List[Tuple[int, int]]]
+                            ) -> Iterator[int]:
+    """Yield the terminal stream of a parsed grammar in REVERSE order.
+
+    Same lazy stack machine as :func:`expand_grammar`, walking rule items
+    from the tail: consumers that reconstruct ancestry from a post-order
+    stream (``analysis.call_chains``) can stream it without materializing
+    the forward expansion first.
+    """
+    start = rules[0]
+    stack: List[List] = [[start, len(start) - 1, 0]]
+    while stack:
+        frame = stack[-1]
+        items = frame[0]
+        if frame[2] == 0:
+            if frame[1] < 0:
+                stack.pop()
+                continue
+            frame[2] = items[frame[1]][1]
+            frame[1] -= 1
+            continue
+        code = items[frame[1] + 1][0]
+        frame[2] -= 1
+        if code & 1:
+            body = rules[code >> 1]
+            stack.append([body, len(body) - 1, 0])
+        else:
+            yield code >> 1
+
+
+# ---------------------------------------------------------------------------
+# grammar-weighted aggregation (compressed-domain analysis support)
+# ---------------------------------------------------------------------------
+#
+# The expansion multiplicity of every rule -- and from it the occurrence
+# count of every terminal -- is a pure function of the grammar, computable in
+# O(|grammar|) without expanding a single record.  TraceView builds all its
+# weighted aggregates (call mixes, size histograms, byte totals, record
+# counts) on these.
+
+
+def _topo_order(rules: List[List[Tuple[int, int]]]) -> List[int]:
+    """Rule indices ordered so every rule precedes the rules it references
+    (Kahn's algorithm over the rule-reference DAG)."""
+    n = len(rules)
+    refs = [[code >> 1 for code, _ in items if code & 1] for items in rules]
+    indeg = [0] * n
+    for rs in refs:
+        for c in rs:
+            indeg[c] += 1
+    queue = [i for i in range(n) if indeg[i] == 0]
+    order: List[int] = []
+    while queue:
+        i = queue.pop()
+        order.append(i)
+        for c in refs[i]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                queue.append(c)
+    if len(order) != n:
+        raise ValueError("cyclic grammar")
+    return order
+
+
+def rule_weights(rules: List[List[Tuple[int, int]]]) -> List[int]:
+    """How many times each rule's body is expanded in the full expansion of
+    rule 0 (the start rule has weight 1; unreachable rules weight 0).
+
+    O(|grammar|): one pass in topological order, parents before children.
+    """
+    w = [0] * len(rules)
+    if not rules:
+        return w
+    w[0] = 1
+    for i in _topo_order(rules):
+        wi = w[i]
+        if not wi:
+            continue
+        for code, exp in rules[i]:
+            if code & 1:
+                w[code >> 1] += wi * exp
+    return w
+
+
+def terminal_counts(rules: List[List[Tuple[int, int]]]) -> Dict[int, int]:
+    """Occurrence count of every terminal in the full expansion, in
+    O(|grammar|) via :func:`rule_weights` -- never by expanding."""
+    w = rule_weights(rules)
+    counts: Dict[int, int] = {}
+    for i, items in enumerate(rules):
+        wi = w[i]
+        if not wi:
+            continue
+        for code, exp in items:
+            if not code & 1:
+                t = code >> 1
+                counts[t] = counts.get(t, 0) + wi * exp
+    return counts
+
+
+def expansion_length(rules: List[List[Tuple[int, int]]]) -> int:
+    """Total number of terminals in the expansion, in O(|grammar|)."""
+    w = rule_weights(rules)
+    return sum(w[i] * exp
+               for i, items in enumerate(rules) if w[i]
+               for code, exp in items if not code & 1)
+
+
+def terminal_positions(rules: List[List[Tuple[int, int]]]
+                       ) -> Tuple[Dict[int, int], Dict[int, int]]:
+    """(first, last) 0-based expansion position of every reachable terminal.
+
+    A bottom-up DP over rules (children before parents): each rule carries
+    its expansion length plus the first/last offset of every distinct
+    terminal in its subtree.  Cost is O(|grammar| x distinct terminals per
+    subtree) -- bounded by |grammar| x |CST|, tiny in practice -- and never
+    expands the stream.  TraceView uses the positions to decide whether a
+    handle's opens all precede its data calls (exactness guard for the
+    grammar-weighted per-file attribution).
+    """
+    n = len(rules)
+    lengths = [0] * n
+    firsts: List[Optional[Dict[int, int]]] = [None] * n
+    lasts: List[Optional[Dict[int, int]]] = [None] * n
+    for i in reversed(_topo_order(rules)):
+        f: Dict[int, int] = {}
+        last: Dict[int, int] = {}
+        pos = 0
+        for code, exp in rules[i]:
+            x = code >> 1
+            if code & 1:
+                sz = lengths[x]
+                for t, off in firsts[x].items():  # type: ignore[union-attr]
+                    if t not in f:
+                        f[t] = pos + off
+                for t, off in lasts[x].items():  # type: ignore[union-attr]
+                    last[t] = pos + (exp - 1) * sz + off
+            else:
+                sz = 1
+                if x not in f:
+                    f[x] = pos
+                last[x] = pos + (exp - 1)
+            pos += exp * sz
+        lengths[i] = pos
+        firsts[i] = f
+        lasts[i] = last
+    return firsts[0] or {}, lasts[0] or {}
+
+
 def grammar_stats(rules: List[List[Tuple[int, int]]]) -> Dict[str, int]:
     return {
         "n_rules": len(rules),

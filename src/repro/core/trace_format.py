@@ -28,6 +28,15 @@ FORMAT_VERSION = 3  # "Recorder 3" -- the paper's major revision
 make_signature = encode_signature
 
 
+class TraceFormatError(Exception):
+    """A trace directory is unreadable: missing files, malformed metadata,
+    or a format_version this reader does not understand."""
+
+
+_TRACE_FILES = ("metadata.json", "merged_cst.bin", "unique_cfgs.bin",
+                "cfg_index.bin", "timestamps.bin")
+
+
 def _write_blob_list(path: str, blobs: List[bytes]) -> None:
     out = bytearray()
     write_uvarint(out, len(blobs))
@@ -92,8 +101,23 @@ def write_trace(trace_dir: str, *, registry: FunctionRegistry,
 
 
 def read_trace_files(trace_dir: str) -> Dict[str, Any]:
+    missing = [n for n in _TRACE_FILES
+               if not os.path.exists(os.path.join(trace_dir, n))]
+    if missing:
+        raise TraceFormatError(
+            f"not a readable trace directory: {trace_dir!r} is missing "
+            f"{', '.join(missing)}")
     with open(os.path.join(trace_dir, "metadata.json")) as f:
-        meta = json.load(f)
+        try:
+            meta = json.load(f)
+        except ValueError as e:
+            raise TraceFormatError(
+                f"malformed metadata.json in {trace_dir!r}: {e}") from e
+    version = meta.get("format_version")
+    if version != FORMAT_VERSION:
+        raise TraceFormatError(
+            f"unsupported format_version {version!r} in {trace_dir!r} "
+            f"(this reader understands {FORMAT_VERSION})")
     merged_cst = _read_blob_list(os.path.join(trace_dir, "merged_cst.bin"))
     unique_cfgs = _read_blob_list(os.path.join(trace_dir, "unique_cfgs.bin"))
     with open(os.path.join(trace_dir, "cfg_index.bin"), "rb") as f:

@@ -1,0 +1,653 @@
+"""Compressed-domain trace queries (paper Section 4 without expansion).
+
+``TraceView`` is the read-side counterpart of the tree finalize (PR 1): it
+answers the Section-4 analyses from the compressed representation directly
+instead of expanding every record through a per-record Python iterator.
+Three pillars:
+
+grammar-weighted aggregation
+    Per-terminal occurrence counts come from Sequitur rule expansion
+    weights (``sequitur.rule_weights`` / ``terminal_counts``) in
+    O(|grammar|), so record counts, call mixes, size histograms and byte
+    totals are sums over <= |CST| distinct signatures x weights -- never
+    over expanded records.
+
+columnar materialization
+    The merged CST is batch-decoded ONCE into NumPy header columns plus
+    role-indexed size / handle / offset-encoding columns
+    (``encoding.decode_signatures_batch``).  Per-rank timestamp arrays are
+    decompressed lazily and memoized, only when a query touches them.
+
+rank-symbolic resolution
+    ``RankPattern`` / ``IterPattern`` offsets stay symbolic in the columns.
+    Queries that need concrete per-record extents (consistency analysis)
+    walk the terminal stream ONCE per unique CFG -- every rank sharing a
+    CFG has the same stream -- keeping each offset as a linear function of
+    the rank, then resolve all ranks in a closed-form vectorized pass
+    (the read-side use of the linear-summary idea from ``interprocess``).
+
+Exactness: every query is value-identical to the record-iterator path
+(``TraceReader.iter_records``), property-tested in
+``tests/test_traceview.py``.  Where a compressed-domain shortcut could
+diverge on pathological streams (per-file attribution under ambiguous
+handle reuse, rank-dependent pattern-run continuation), the view detects
+the case from the compressed form and falls back to an exact per-CFG or
+per-rank walk.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import defaultdict
+from itertools import repeat
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .encoding import (Handle, IterPattern, RankPattern,
+                       decode_signatures_batch)
+from .patterns import IntraPatternDecoder
+from .reader import Record, _resolve_rank
+from .sequitur import (expand_grammar, expand_grammar_reversed,
+                       terminal_counts, terminal_positions)
+from .timestamps import decompress_timestamps
+
+_DATA_FUNCS = frozenset({"pwrite", "write", "pread", "read", "shard_write_at",
+                         "shard_read_at"})
+_OPEN_FUNCS = ("open", "shard_open")
+_IO_LAYERS = ("posix", "shardio")
+_WRITE_FUNCS = ("pwrite", "shard_write_at")
+_I64_SAFE = 1 << 62
+_NO_HANDLE = object()
+
+
+def _contains_rankpattern(v: Any) -> bool:
+    if isinstance(v, RankPattern):
+        return True
+    if isinstance(v, IterPattern):
+        return _contains_rankpattern(v.a) or _contains_rankpattern(v.b)
+    if isinstance(v, tuple):
+        return any(_contains_rankpattern(x) for x in v)
+    return False
+
+
+def _lin0(v: Any) -> Tuple[int, int]:
+    """(rank coefficient, constant) of a rank-symbolic scalar."""
+    if isinstance(v, RankPattern):
+        return v.a, v.b
+    return 0, int(v)
+
+
+def _derive_key(func_id: int, tidx: int, args: tuple, ret: Any,
+                roles: Sequence[str], ret_is_offset: bool) -> tuple:
+    """The pattern-run decode key of one call: non-offset args split into
+    handle ids and key parts (single definition site -- the decoder state
+    only matches the runtime tracker if every path builds keys this way)."""
+    handle_ids: List[int] = []
+    keyparts: List[Any] = []
+    for j, a in enumerate(args):
+        role = roles[j] if j < len(roles) else "val"
+        if role == "offset":
+            continue
+        if isinstance(a, Handle):
+            handle_ids.append(a.id)
+        else:
+            keyparts.append(a)
+    key_ret = None if ret_is_offset else (
+        ("h", ret.id) if isinstance(ret, Handle) else ret)
+    return (func_id, tidx, tuple(handle_ids), tuple(keyparts), key_ret)
+
+
+def sweep_conflicts(writes: Dict[Any, List[Tuple[int, int, int]]]
+                    ) -> List[Dict[str, Any]]:
+    """Cross-rank conflicting extents via an active-interval sweep.
+
+    ``writes`` maps a handle id to ``(rank, start, end)`` half-open spans.
+    Every pair of overlapping spans from DIFFERENT ranks is reported (the
+    seed scanned only start-adjacent pairs, dropping e.g. a long extent
+    overlapping a later non-adjacent span); identical conflicts are
+    deduplicated.  ``ranks`` orders the earlier-starting span first and the
+    reported extent is ``(later start, min(ends))``.
+    """
+    conflicts: List[Dict[str, Any]] = []
+    seen = set()
+    for hid, spans in writes.items():
+        # identical (rank, start, end) spans can only rediscover already-
+        # deduplicated conflicts; dropping them up front keeps the sweep
+        # near-linear when ranks repeatedly rewrite one extent
+        spans = list(dict.fromkeys(spans))
+        active: List[Tuple[int, int]] = []  # heap of (end, rank)
+        for r2, a2, b2 in sorted(spans, key=lambda s: s[1]):
+            while active and active[0][0] <= a2:
+                heapq.heappop(active)
+            for b1, r1 in active:
+                if r1 != r2:
+                    ext = (a2, min(b1, b2))
+                    k = (hid, r1, r2, ext)
+                    if k not in seen:
+                        seen.add(k)
+                        conflicts.append({"handle": hid, "ranks": (r1, r2),
+                                          "extent": ext})
+            heapq.heappush(active, (b2, r2))
+    return conflicts
+
+
+class _SigInfo:
+    """Per-CST-entry derived metadata (role-indexed columns)."""
+
+    __slots__ = ("name", "layer", "is_data", "is_io_layer", "size",
+                 "size_symbolic", "handle", "enc")
+
+    def __init__(self) -> None:
+        self.enc: Optional[tuple] = None
+
+
+class TraceView:
+    """Columnar, compressed-domain query API over one trace directory.
+
+    Build it with :meth:`TraceReader.view`.  Aggregate queries
+    (:meth:`io_summary`, :meth:`size_histogram`, :meth:`n_records`) run in
+    O(|grammar| + |CST|); sequential queries (:meth:`call_chains`,
+    :meth:`consistency_pairs`) cost one stream walk per *unique CFG*, not
+    per rank; :meth:`iter_records` is the lossless row-wise reference path
+    that the ``TraceReader`` shims delegate to.
+    """
+
+    def __init__(self, reader) -> None:
+        self.reader = reader
+        self.nranks: int = reader.nranks
+        self.functions: Dict[int, Dict[str, Any]] = reader.functions
+        self.grammars = reader.unique_cfgs
+        self.cfg_index: List[int] = reader.cfg_index
+        self.columns = decode_signatures_batch(reader.merged_cst)
+        self._sigs = [self._sig_info(t) for t in range(len(self.columns))]
+        self._cfg_mult: Dict[int, int] = {}
+        for u in self.cfg_index:
+            self._cfg_mult[u] = self._cfg_mult.get(u, 0) + 1
+        # per-unique-CFG memos
+        self._counts: Dict[int, Dict[int, int]] = {}
+        self._positions: Dict[int, Tuple[Dict[int, int], Dict[int, int]]] = {}
+        self._perfile: Dict[int, Dict[Any, Dict[str, int]]] = {}
+        self._spancols: Dict[Tuple[int, tuple], Any] = {}
+        self._totals: Optional[Dict[int, int]] = None
+        # per-rank timestamp memo (decompressed lazily)
+        self._ts: Dict[int, Optional[np.ndarray]] = {}
+
+    # -- column construction --------------------------------------------------
+
+    def _sig_info(self, t: int) -> _SigInfo:
+        cols = self.columns
+        finfo = self.functions[int(cols.func_id[t])]
+        args, ret = cols.args[t], cols.ret[t]
+        roles = finfo["arg_roles"]
+        s = _SigInfo()
+        s.name = finfo["name"]
+        s.layer = finfo["layer"]
+        s.is_data = s.name in _DATA_FUNCS
+        s.is_io_layer = s.layer in _IO_LAYERS
+        # _size_of: first BUF/SIZE int arg, else int return, else 0
+        size = None
+        for v, role in zip(args, roles):
+            if role in ("buf", "size") and isinstance(v, int):
+                size = v
+                break
+        ret_is_offset = (finfo["ret_role"] == "offset"
+                         and isinstance(ret, (int, IterPattern, RankPattern)))
+        s.size = size if size is not None else (
+            ret if isinstance(ret, int) else 0)
+        # a size that would come from a pattern-coded return cannot be read
+        # off the signature alone (it depends on the run index / rank)
+        s.size_symbolic = size is None and ret_is_offset \
+            and not isinstance(ret, int)
+        s.handle = next((v.id for v, role in zip(args, roles)
+                         if role == "handle" and hasattr(v, "id")), _NO_HANDLE)
+        off_slots = [j for j, r in enumerate(roles)
+                     if r == "offset" and j < len(args)]
+        if off_slots or ret_is_offset:
+            key = _derive_key(int(cols.func_id[t]), int(cols.thread[t]),
+                              args, ret, roles, ret_is_offset)
+            enc = [args[j] for j in off_slots]
+            if ret_is_offset:
+                enc.append(ret)
+            patsig = tuple((v.a, v.b) if isinstance(v, IterPattern) else v
+                           for v in enc)
+            has_iter = any(isinstance(v, IterPattern) for v in enc)
+            # run-key components are never offset-fitted, so a RankPattern
+            # in them would make run identity rank-dependent (guarded)
+            key_rankdep = (_contains_rankpattern(key[3])
+                           or _contains_rankpattern(key[4]))
+            s.enc = (key, tuple(enc), patsig, has_iter, off_slots,
+                     ret_is_offset, key_rankdep)
+        return s
+
+    # -- grammar-weighted counts ----------------------------------------------
+
+    def cfg_terminal_counts(self, u: int) -> Dict[int, int]:
+        """Occurrence count of every terminal of unique CFG ``u`` --
+        O(|grammar|) via rule expansion weights, memoized."""
+        counts = self._counts.get(u)
+        if counts is None:
+            counts = terminal_counts(self.grammars[u])
+            self._counts[u] = counts
+        return counts
+
+    def rank_terminal_counts(self, rank: int) -> Dict[int, int]:
+        return self.cfg_terminal_counts(self.cfg_index[rank])
+
+    def total_terminal_counts(self) -> Dict[int, int]:
+        """Terminal counts summed over ALL ranks: one weighted pass per
+        unique CFG, resolved across ranks by CFG multiplicity (never a
+        per-rank loop over records)."""
+        if self._totals is None:
+            totals: Dict[int, int] = {}
+            for u, mult in self._cfg_mult.items():
+                for t, c in self.cfg_terminal_counts(u).items():
+                    totals[t] = totals.get(t, 0) + mult * c
+            self._totals = totals
+        return self._totals
+
+    def n_records(self, rank: int) -> int:
+        """Record count of one rank in O(|grammar|) (no expansion)."""
+        return sum(self.cfg_terminal_counts(self.cfg_index[rank]).values())
+
+    def total_records(self) -> int:
+        return sum(self.total_terminal_counts().values())
+
+    # -- lazy, memoized per-rank timestamps -----------------------------------
+
+    def _decompress_ts(self, rank: int) -> Optional[np.ndarray]:
+        rank_ts = self.reader.rank_ts
+        blob = rank_ts[rank] if rank < len(rank_ts) else None
+        return decompress_timestamps(blob) if blob else None
+
+    def timestamps(self, rank: int) -> Optional[np.ndarray]:
+        """(n, 2) entry/exit tick array of one rank, or None when the trace
+        has no timestamps for it.  Decompressed on first touch, memoized."""
+        if rank not in self._ts:
+            self._ts[rank] = self._decompress_ts(rank)
+        return self._ts[rank]
+
+    # -- aggregate queries (grammar-weighted) ---------------------------------
+
+    def io_summary(self) -> Dict[str, Any]:
+        """Aggregate transfer sizes, call mix, per-file totals, bandwidth.
+
+        Counts and byte totals are weighted sums over distinct signatures;
+        per-file attribution is weighted too when the grammar proves every
+        data call follows a unique open of its handle (first/last terminal
+        positions), else it falls back to one exact walk per unique CFG.
+        Timestamp bounds are the only part that touches expanded data, and
+        only lazily (per-rank decompressed arrays, vectorized min/max).
+        """
+        totals = self.total_terminal_counts()
+        sigs = self._sigs
+        n_data = n_meta = total_bytes = 0
+        for t, c in totals.items():
+            s = sigs[t]
+            if s.is_data:
+                n_data += c
+                total_bytes += c * s.size
+            elif s.is_io_layer:
+                n_meta += c
+        per_file: Dict[Any, Dict[str, int]] = defaultdict(
+            lambda: {"bytes": 0, "calls": 0})
+        for u, mult in self._cfg_mult.items():
+            for key, d in self._per_file_cfg(u).items():
+                agg = per_file[key]
+                agg["bytes"] += mult * d["bytes"]
+                agg["calls"] += mult * d["calls"]
+        t_lo: Any = float("inf")
+        t_hi: Any = 0
+        for r in range(self.nranks):
+            # transient decompress: reducing all ranks to a min/max must not
+            # pin every rank's array in the memo (reuse it when present)
+            ts = self._ts[r] if r in self._ts else self._decompress_ts(r)
+            if ts is None or not len(ts):
+                continue
+            ent = ts[:, 0].astype(np.int64)
+            ext = ts[:, 1].astype(np.int64)
+            t_lo = min(t_lo, int(ent.min()))
+            # a zero exit tick falls back to the entry tick (seed `or`)
+            t_hi = max(t_hi, int(np.where(ext != 0, ext, ent).max()))
+        wall_us = max(t_hi - t_lo, 1)
+        return {
+            "files": dict(per_file),
+            "n_data_calls": n_data,
+            "n_metadata_calls": n_meta,
+            "metadata_ratio": n_meta / max(n_data + n_meta, 1),
+            "total_bytes": total_bytes,
+            "aggregate_MBps": total_bytes / wall_us,  # bytes/us == MB/s
+        }
+
+    def size_histogram(self, edges: Sequence[int] = (512, 4096, 65536, 1 << 20)
+                       ) -> Dict[str, int]:
+        """Request-size distribution of data calls: pure weighted sum over
+        distinct signatures (O(|grammar| + |CST|))."""
+        buckets = {f"<{e}": 0 for e in edges}
+        top = f">={edges[-1]}"
+        buckets[top] = 0
+        sigs = self._sigs
+        for t, c in self.total_terminal_counts().items():
+            s = sigs[t]
+            if not s.is_data:
+                continue
+            for e in edges:
+                if s.size < e:
+                    buckets[f"<{e}"] += c
+                    break
+            else:
+                buckets[top] += c
+        return buckets
+
+    def _cfg_positions(self, u: int):
+        pos = self._positions.get(u)
+        if pos is None:
+            pos = terminal_positions(self.grammars[u])
+            self._positions[u] = pos
+        return pos
+
+    def _per_file_cfg(self, u: int) -> Dict[Any, Dict[str, int]]:
+        """Per-file {bytes, calls} of ONE rank using CFG ``u`` (identical
+        for every rank sharing the CFG; callers scale by multiplicity).
+
+        Fast path: grammar-weighted, using first/last terminal positions to
+        prove each data call sees exactly one open path for its handle.
+        Ambiguous handle/path reuse falls back to one exact stream walk.
+        """
+        cached = self._perfile.get(u)
+        if cached is not None:
+            return cached
+        counts = self.cfg_terminal_counts(u)
+        sigs = self._sigs
+        cols = self.columns
+        opens: Dict[int, set] = {}
+        open_first: Dict[int, int] = {}
+        data_terms = []
+        need_pos = False
+        for t in counts:
+            s = sigs[t]
+            if s.name in _OPEN_FUNCS and hasattr(cols.ret[t], "id"):
+                opens.setdefault(cols.ret[t].id, set()).add(
+                    str(cols.args[t][0]))
+                need_pos = True
+            if s.is_data:
+                data_terms.append(t)
+        per: Dict[Any, Dict[str, int]] = {}
+        first = last = None
+        if need_pos:
+            first, last = self._cfg_positions(u)
+            for t in counts:
+                s = sigs[t]
+                if s.name in _OPEN_FUNCS and hasattr(cols.ret[t], "id"):
+                    h = cols.ret[t].id
+                    p = first[t]
+                    if h not in open_first or p < open_first[h]:
+                        open_first[h] = p
+        ok = True
+        for t in data_terms:
+            s = sigs[t]
+            if s.handle is _NO_HANDLE:
+                key: Any = "?"
+            elif s.handle not in opens:
+                key = None  # never opened in this stream
+            elif len(opens[s.handle]) == 1:
+                if open_first[s.handle] < first[t]:
+                    key = next(iter(opens[s.handle]))
+                elif open_first[s.handle] > last[t]:
+                    key = None  # every occurrence precedes the open
+                else:
+                    ok = False  # occurrences straddle the open
+                    break
+            else:
+                ok = False  # handle re-opened under different paths
+                break
+            agg = per.setdefault(key, {"bytes": 0, "calls": 0})
+            agg["bytes"] += counts[t] * s.size
+            agg["calls"] += counts[t]
+        if not ok:
+            per = self._per_file_walk(u)
+        self._perfile[u] = per
+        return per
+
+    def _per_file_walk(self, u: int) -> Dict[Any, Dict[str, int]]:
+        """Exact per-file attribution: one walk of CFG ``u``'s stream."""
+        sigs = self._sigs
+        cols = self.columns
+        handles: Dict[int, str] = {}
+        per: Dict[Any, Dict[str, int]] = {}
+        for t in expand_grammar(self.grammars[u]):
+            s = sigs[t]
+            if s.name in _OPEN_FUNCS and hasattr(cols.ret[t], "id"):
+                handles[cols.ret[t].id] = str(cols.args[t][0])
+            if s.is_data:
+                key = "?" if s.handle is _NO_HANDLE else handles.get(s.handle)
+                agg = per.setdefault(key, {"bytes": 0, "calls": 0})
+                agg["bytes"] += s.size
+                agg["calls"] += 1
+        return per
+
+    # -- sequential queries (one walk per unique CFG) -------------------------
+
+    def call_chains(self, targets=_DATA_FUNCS, rank: int = 0) -> Dict[str, int]:
+        """Cross-layer ancestry chains ending in a target call.
+
+        The post-order stream is walked in REVERSE, streamed lazily from
+        the grammar (``expand_grammar_reversed``) -- parents appear before
+        children, so the depth-indexed stack rebuilds each chain without
+        materializing the forward record list.
+        """
+        sigs = self._sigs
+        depth = self.columns.depth.tolist()
+        chains: Dict[str, int] = defaultdict(int)
+        stack: List[str] = []
+        for t in expand_grammar_reversed(self.grammars[self.cfg_index[rank]]):
+            name = sigs[t].name
+            del stack[depth[t]:]
+            stack.append(name)
+            if name in targets:
+                chains["->".join(stack)] += 1
+        return dict(chains)
+
+    def overlap_ratio(self, rank: int = 0) -> float:
+        """Fraction of busy I/O time with >= 2 threads inside calls:
+        vectorized event sweep over the rank's lazy timestamp array."""
+        ts = self.timestamps(rank)
+        if ts is None or not len(ts):
+            return 0.0
+        n = len(ts)
+        t = np.concatenate([ts[:, 0], ts[:, 1]]).astype(np.int64)
+        d = np.concatenate([np.ones(n, np.int64), -np.ones(n, np.int64)])
+        # tuple-sort order of the seed: by time, exits (-1) before entries
+        order = np.lexsort((d, t))
+        t, d = t[order], d[order]
+        c = np.cumsum(d)[:-1]  # depth between consecutive events
+        dt = np.diff(t)
+        busy = int(dt[c >= 1].sum())
+        overlap = int(dt[c >= 2].sum())
+        return overlap / busy if busy else 0.0
+
+    def _span_cols(self, u: int, targets: tuple):
+        """Rank-symbolic write extents of CFG ``u``, grouped by handle id in
+        stream order: one walk per unique CFG, replaying the pattern-run
+        decoding symbolically (offsets stay linear functions of the rank).
+
+        Returns ``[(hid, coefs, consts, sizes, np_cols)] `` or None when
+        the run evolution could be rank-dependent (distinct pattern
+        signatures carrying RankPattern compared under one key) -- callers
+        then fall back to the exact per-rank record path.
+        """
+        ck = (u, targets)
+        if ck in self._spancols:
+            return self._spancols[ck]
+        sigs = self._sigs
+        runs: Dict[Any, Tuple[int, Optional[tuple]]] = {}
+        order: List[int] = []
+        groups: Dict[Any, Tuple[List[int], List[int], List[int]]] = {}
+        result: Any = []
+        for t in expand_grammar(self.grammars[u]):
+            s = sigs[t]
+            vals: Optional[List[Tuple[int, int]]] = None
+            if s.enc is not None:
+                (key, enc, patsig, has_iter, off_slots, ret_is_offset,
+                 key_rankdep) = s.enc
+                if key_rankdep:
+                    result = None
+                    break
+                if not has_iter:
+                    runs[key] = (1, None)
+                    vals = [_lin0(v) for v in enc]
+                else:
+                    idx, prev = runs.get(key, (1, None))
+                    if prev is not None and prev == patsig:
+                        idx += 1
+                    elif prev is not None and (
+                            _contains_rankpattern(prev)
+                            or _contains_rankpattern(patsig)):
+                        # symbolically distinct signatures could still
+                        # coincide for individual ranks: not resolvable
+                        # rank-symbolically
+                        result = None
+                        break
+                    vals = []
+                    for v in enc:
+                        if isinstance(v, IterPattern):
+                            ca, va = _lin0(v.a)
+                            cb, vb = _lin0(v.b)
+                            vals.append((cb + idx * ca, vb + idx * va))
+                        else:
+                            vals.append(_lin0(v))
+                    runs[key] = (idx, patsig)
+            if (s.name in targets and vals is not None and s.enc is not None
+                    and s.enc[4]):  # has at least one offset ARG slot
+                if s.size_symbolic:
+                    result = None
+                    break
+                hid = -1 if s.handle is _NO_HANDLE else s.handle
+                if hid not in groups:
+                    groups[hid] = ([], [], [])
+                    order.append(hid)
+                coef, const = vals[0]
+                g = groups[hid]
+                g[0].append(coef)
+                g[1].append(const)
+                g[2].append(s.size)
+        if result is not None:
+            for hid in order:
+                coefs, consts, sizes = groups[hid]
+                bound = (max(map(abs, consts), default=0)
+                         + self.nranks * max(map(abs, coefs), default=0)
+                         + max(map(abs, sizes), default=0))
+                np_cols = None
+                if bound < _I64_SAFE:
+                    np_cols = (np.asarray(coefs, dtype=np.int64),
+                               np.asarray(consts, dtype=np.int64),
+                               np.asarray(sizes, dtype=np.int64))
+                result.append((hid, coefs, consts, sizes, np_cols))
+        self._spancols[ck] = result
+        return result
+
+    def consistency_pairs(self, targets=_WRITE_FUNCS) -> List[Dict[str, Any]]:
+        """Cross-rank overlapping write extents per handle id.
+
+        Extents are produced rank-symbolically once per unique CFG and
+        resolved for every rank in one vectorized pass; conflicts come from
+        :func:`sweep_conflicts` (ALL overlapping cross-rank pairs, not just
+        start-adjacent ones).
+        """
+        targets = tuple(targets)
+        writes: Dict[int, List[Tuple[int, int, int]]] = {}
+        for r in range(self.nranks):
+            cols = self._span_cols(self.cfg_index[r], targets)
+            if cols is None:
+                self._collect_spans_records(r, targets, writes)
+                continue
+            for hid, coefs, consts, sizes, np_cols in cols:
+                lst = writes.setdefault(hid, [])
+                if np_cols is not None:
+                    c1, c0, sz = np_cols
+                    starts = c0 + r * c1
+                    lst.extend(zip(repeat(r), starts.tolist(),
+                                   (starts + sz).tolist()))
+                else:
+                    lst.extend((r, c0 + r * c1, c0 + r * c1 + sz)
+                               for c1, c0, sz in zip(coefs, consts, sizes))
+        return sweep_conflicts(writes)
+
+    def _collect_spans_records(self, rank: int, targets: tuple,
+                               writes: Dict[int, List[Tuple[int, int, int]]]
+                               ) -> None:
+        """Exact per-rank fallback: expand this rank's records."""
+        for rec in self.iter_records(rank, timestamps=False):
+            if rec.func not in targets:
+                continue
+            off = next((v for v, role in zip(rec.args, rec.roles)
+                        if role == "offset" and isinstance(v, int)), None)
+            if off is None:
+                continue
+            sz = next((v for v, role in zip(rec.args, rec.roles)
+                       if role in ("buf", "size") and isinstance(v, int)),
+                      rec.ret if isinstance(rec.ret, int) else 0)
+            hid = next((v.id for v, role in zip(rec.args, rec.roles)
+                        if role == "handle" and hasattr(v, "id")), -1)
+            writes.setdefault(hid, []).append((rank, off, off + sz))
+
+    # -- the lossless row-wise reference path ---------------------------------
+
+    def iter_records(self, rank: int, timestamps: bool = True
+                     ) -> Iterator[Record]:
+        """Expand one rank's full record stream (lossless reconstruction).
+
+        This is the seed read path, now fed from the batch-decoded columns;
+        ``TraceReader.iter_records`` delegates here.  Prefer the aggregate
+        queries above -- they answer without expansion.
+        """
+        grammar = self.grammars[self.cfg_index[rank]]
+        decoder = IntraPatternDecoder()
+        cols = self.columns
+        sigs = self._sigs
+        # transient unless already memoized: a full-trace iteration (e.g.
+        # the converters) must not pin every rank's array, like the seed
+        ts = None
+        if timestamps:
+            ts = self._ts[rank] if rank in self._ts else \
+                self._decompress_ts(rank)
+        for i, terminal in enumerate(expand_grammar(grammar)):
+            s = sigs[terminal]
+            func_id = int(cols.func_id[terminal])
+            tidx = int(cols.thread[terminal])
+            finfo = self.functions[func_id]
+            roles = finfo["arg_roles"]
+            # resolve rank patterns everywhere
+            args = tuple(_resolve_rank(a, rank)
+                         for a in cols.args[terminal])
+            ret = _resolve_rank(cols.ret[terminal], rank)
+            # resolve iteration patterns on OFFSET-role slots (and returns),
+            # reusing the per-terminal derivation from the columns; only a
+            # rank-dependent key (RankPattern in its parts) is re-derived
+            if s.enc is not None:
+                key, _, _, _, off_slots, ret_is_offset, key_rankdep = s.enc
+                if key_rankdep:
+                    key = _derive_key(func_id, tidx, args, ret, roles,
+                                      ret_is_offset)
+                enc = [args[j] for j in off_slots]
+                if ret_is_offset:
+                    enc.append(ret)
+                dec = decoder.decode(key, enc)
+                args = list(args)
+                for j, v in zip(off_slots, dec):
+                    args[j] = v
+                args = tuple(args)
+                if ret_is_offset:
+                    ret = dec[-1]
+            t0 = int(ts[i, 0]) if ts is not None else None
+            t1 = int(ts[i, 1]) if ts is not None else None
+            yield Record(func=s.name, layer=s.layer, args=args,
+                         arg_names=tuple(finfo["arg_names"]), ret=ret,
+                         thread=tidx, depth=int(cols.depth[terminal]),
+                         t_entry=t0, t_exit=t1, roles=tuple(roles))
+
+    def all_records(self, timestamps: bool = True
+                    ) -> Iterator[Tuple[int, Record]]:
+        for r in range(self.nranks):
+            for rec in self.iter_records(r, timestamps=timestamps):
+                yield r, rec

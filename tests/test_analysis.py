@@ -79,15 +79,14 @@ def test_overlap_ratio_multithreaded(tmp_path):
     assert 0.0 <= r <= 1.0
 
 
-def test_consistency_pairs(tmp_path):
-    """Cross-rank overlapping writes (the [27,28] consistency study)."""
+def _write_span_trace(tmp_path, spans):
+    """One pwrite per rank: ``spans[rank] = (offset, size)``."""
     states = []
     fid = REGISTRY.id_of("pwrite")
-    for rank in range(2):
+    for rank, (off, size) in enumerate(spans):
         rec = Recorder(rank=rank, config=RecorderConfig())
         fdobj = object()
-        # both ranks write [0, 100): a genuine conflict
-        rec.record(fid, (fdobj, b"a" * 100, 0), 100, 0, 0, 1)
+        rec.record(fid, (fdobj, b"a" * size, off), size, 0, 0, 1)
         states.append(rec.local_state())
     merge, cfgs = finalize_ranks([s[0] for s in states],
                                  [s[1] for s in states], REGISTRY)
@@ -97,6 +96,24 @@ def test_consistency_pairs(tmp_path):
                              unique_cfgs=cfgs.unique_cfgs,
                              cfg_index=cfgs.cfg_index,
                              rank_timestamps=[s[2] for s in states])
+    return tdir
+
+
+def test_consistency_pairs(tmp_path):
+    """Cross-rank overlapping writes (the [27,28] consistency study)."""
+    # both ranks write [0, 100): a genuine conflict
+    tdir = _write_span_trace(tmp_path, [(0, 100), (0, 100)])
     conflicts = consistency_pairs(TraceReader(tdir))
     assert len(conflicts) == 1
     assert conflicts[0]["extent"] == (0, 100)
+
+
+def test_consistency_pairs_non_adjacent_overlap(tmp_path):
+    """Regression: a long extent must conflict with every later overlapping
+    span, not only the start-adjacent one.  Rank 0 writes [0, 100); rank 1
+    writes [10, 20); rank 2 writes [30, 40) -- the seed adjacent-pair scan
+    dropped the 0<->2 conflict."""
+    tdir = _write_span_trace(tmp_path, [(0, 100), (10, 10), (30, 10)])
+    conflicts = consistency_pairs(TraceReader(tdir))
+    got = {(c["ranks"], c["extent"]) for c in conflicts}
+    assert got == {((0, 1), (10, 20)), ((0, 2), (30, 40))}

@@ -1,0 +1,73 @@
+"""On-disk trace validation: missing files and unsupported format versions
+fail with a clear TraceFormatError instead of raw KeyError/FileNotFoundError."""
+
+import json
+import os
+
+import pytest
+
+from repro.core.recorder import RecorderConfig, session
+from repro.core.trace_format import (FORMAT_VERSION, TraceFormatError,
+                                     read_trace_files)
+from repro.core.apis import posix
+from repro.core.reader import TraceReader
+
+
+@pytest.fixture
+def valid_trace(tmp_path):
+    datadir = tmp_path / "data"
+    datadir.mkdir()
+    tracedir = str(tmp_path / "trace")
+    with session(RecorderConfig(trace_dir=tracedir)):
+        fd = posix.open(str(datadir / "f.bin"), os.O_RDWR | os.O_CREAT, 0o644)
+        posix.pwrite(fd, b"x" * 16, 0)
+        posix.close(fd)
+    return tracedir
+
+
+def test_missing_directory_is_a_format_error(tmp_path):
+    with pytest.raises(TraceFormatError, match="missing"):
+        read_trace_files(str(tmp_path / "nope"))
+
+
+def test_missing_file_names_the_file(valid_trace):
+    os.remove(os.path.join(valid_trace, "merged_cst.bin"))
+    with pytest.raises(TraceFormatError, match="merged_cst.bin"):
+        read_trace_files(valid_trace)
+    with pytest.raises(TraceFormatError):
+        TraceReader(valid_trace)
+
+
+def test_unsupported_format_version(valid_trace):
+    meta_path = os.path.join(valid_trace, "metadata.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["format_version"] = FORMAT_VERSION + 1
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(TraceFormatError, match="format_version"):
+        read_trace_files(valid_trace)
+
+
+def test_missing_format_version(valid_trace):
+    meta_path = os.path.join(valid_trace, "metadata.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["format_version"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(TraceFormatError, match="format_version"):
+        read_trace_files(valid_trace)
+
+
+def test_malformed_metadata(valid_trace):
+    with open(os.path.join(valid_trace, "metadata.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(TraceFormatError, match="metadata.json"):
+        read_trace_files(valid_trace)
+
+
+def test_valid_trace_reads(valid_trace):
+    data = read_trace_files(valid_trace)
+    assert data["meta"]["format_version"] == FORMAT_VERSION
+    assert TraceReader(valid_trace).n_records(0) == 3

@@ -104,6 +104,53 @@ def test_tree_reduction_order_invariance():
     assert serialize_rank_state(tree) == serialize_rank_state(fold)
 
 
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 32),
+       st.sampled_from(["nested", "multi", "mixed_all"]),
+       st.integers(1, 4), st.integers(1, 6), st.integers(0, 2 ** 20))
+def test_tree_matches_flat_nested_and_multi_offset(nranks, pattern, n_groups,
+                                                   n_calls, seed):
+    """The extended synth shapes -- nested IterPattern-of-RankPattern
+    offsets (paper Fig 3c) and joint multi-offset lseek runs -- finalize
+    identically on both topologies."""
+    csts, cfgs = synth_rank_states(nranks, n_groups=n_groups,
+                                   n_calls=n_calls, pattern=pattern,
+                                   seed=seed)
+    _assert_same_finalize(
+        finalize_ranks(csts, cfgs, REGISTRY, fit_mode="python"),
+        tree_finalize_ranks(csts, cfgs, REGISTRY))
+
+
+def test_synth_nested_roundtrips_through_reader(tmp_path):
+    """Nested offsets (rank-linear base AND stride) and joint lseek
+    offset/return runs come back exactly from the merged trace."""
+    nprocs, n_groups, n_calls, chunk = 5, 2, 6, 512
+    big = 1 << 24
+    for pattern in ("nested", "multi"):
+        csts, cfgs = synth_rank_states(nprocs, n_groups=n_groups,
+                                       n_calls=n_calls, pattern=pattern,
+                                       chunk=chunk)
+        merge, cfgres = tree_finalize_ranks(csts, cfgs, REGISTRY)
+        d = str(tmp_path / pattern)
+        trace_format.write_trace(d, registry=REGISTRY,
+                                 merged_cst=merge.merged_entries,
+                                 unique_cfgs=cfgres.unique_cfgs,
+                                 cfg_index=cfgres.cfg_index,
+                                 rank_timestamps=[b""] * nprocs,
+                                 meta_extra={})
+        reader = TraceReader(d)
+        for r in range(nprocs):
+            base = lambda g: r * chunk + g * big  # noqa: E731
+            step = ((nprocs + r) * chunk if pattern == "nested"
+                    else nprocs * chunk)
+            want = [base(g) + i * step
+                    for g in range(n_groups) for i in range(n_calls)]
+            recs = list(reader.iter_records(r, timestamps=False))
+            assert [rec.arg("offset") for rec in recs] == want, (pattern, r)
+            if pattern == "multi":
+                assert [rec.ret for rec in recs] == want  # joint OFFSET ret
+
+
 def test_merge_requires_adjacent_blocks():
     csts, cfgs = synth_rank_states(3, n_groups=1, n_calls=2)
     s0, _, s2 = (make_rank_state(r, csts[r], cfgs[r], REGISTRY)
