@@ -15,17 +15,20 @@ import time
 def main() -> None:
     fast = "--fast" in sys.argv
     from . import flash_scaling, ior_pattern, kernel_bench, overhead, \
-        tool_comparison
+        streaming_flush, tool_comparison
 
     # reader_scaling is intentionally NOT in this list: CI runs it as its
     # own `python -m benchmarks.reader_scaling --smoke` step (and the full
     # sweep is a standalone run), so including it here would time the same
-    # sweep twice per CI run.
+    # sweep twice per CI run.  streaming_flush IS here (it asserts the
+    # O(delta) per-flush invariant, cheap either way) and also gets its own
+    # CI --smoke step so a regression is attributable at a glance.
     print("experiment,summary")
     for name, mod in (("ior_pattern", ior_pattern),
                       ("flash_scaling", flash_scaling),
                       ("tool_comparison", tool_comparison),
                       ("overhead", overhead),
+                      ("streaming_flush", streaming_flush),
                       ("kernel_bench", kernel_bench)):
         t0 = time.time()
         try:

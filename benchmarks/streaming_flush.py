@@ -1,0 +1,185 @@
+"""Streaming flush scaling: per-flush cost must stay O(delta), not O(total).
+
+Sweeps epochs x ranks over simulated IOR-shaped epoch workloads.  Each
+epoch drives every rank's Recorder with a fixed-size call window, then
+times the full flush critical path exactly as ``Recorder.flush`` runs it:
+
+  take_epoch -> leaf RankState per rank -> pairwise tree reduction ->
+  CumulativeState.append (the incremental cross-epoch fold) ->
+  materialize the DELTA -> block-compress timestamps -> atomic segment
+  commit + manifest rewrite.
+
+Because the cumulative fold inserts only the epoch's groups and defers
+stream concatenation to finalize, per-flush wall time must be roughly
+constant in the epoch index -- a naive design that re-reduces (or even
+copies) the accumulated history would grow linearly.  ``main`` asserts
+flatness with noise-robust statistics: the MIN of the last three flushes
+must stay within ``FLAT_FACTOR`` of the min of flushes 2-4 plus a small
+absolute slack (min, not mean: a single scheduler stall on a shared CI
+runner inflates one sample, not all three; the first flush is excluded
+because it pays one-time imports/allocations).  A genuine O(total)
+regression inflates EVERY late flush, so the min still catches it.
+
+The emitted JSON also records a time-windowed read-side probe: a
+``bandwidth_bounds`` query over one epoch's window on the stitched
+``TraceView`` must decompress ONLY the timestamp blocks intersecting the
+window (``ts_store.blocks_touched``), asserted here as well.
+
+Writes artifacts/bench/streaming_flush.json:
+  {"config": ..., "rows": [...], "window_probe": {...}}, one row per
+  (nranks, epoch) with flush_s and the flatness verdict per nranks.
+
+    PYTHONPATH=src python -m benchmarks.streaming_flush [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+from repro.core import streaming
+from repro.core.interprocess import (make_rank_state, materialize_state,
+                                     serialize_rank_state,
+                                     tree_reduce_states)
+from repro.core.reader import TraceReader
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+from repro.core.timestamps import (compress_timestamps_blocked,
+                                   pack_ts_blocks, unpack_ts_blocks)
+import repro.core.apis  # noqa: F401  (populate registry)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+FLAT_FACTOR = 4.0  # late flushes may cost at most this x early flushes
+ABS_SLACK_S = 0.010  # plus this much absolute noise allowance
+TS_BLOCK_RECORDS = 256
+
+
+def _feed_epoch(recs: List[Recorder], epoch: int, calls_per_epoch: int,
+                chunk: int = 4096) -> None:
+    """One IOR-shaped window per rank: strided pwrites whose offsets are
+    rank-linear and advance with the epoch (fresh offsets every epoch, so
+    every flush carries a real delta)."""
+    fid = REGISTRY.id_of("pwrite")
+    nranks = len(recs)
+    t0 = epoch * calls_per_epoch * 2
+    for r, rec in enumerate(recs):
+        fd = "FD"
+        base = r * chunk + epoch * calls_per_epoch * nranks * chunk
+        for i in range(calls_per_epoch):
+            off = base + i * nranks * chunk
+            t = t0 + 2 * i
+            rec.record(fid, (fd, b"x" * chunk, off), chunk, 0, t, t + 1)
+
+
+def _flush_once(recs: List[Recorder], cum: streaming.CumulativeState,
+                trace_dir: str, epoch: int, n_records: int) -> float:
+    """The rank-0 flush critical path over simulated ranks (the same data
+    path as Recorder.flush / streaming.run_flush, minus thread-barrier
+    noise)."""
+    t0 = time.perf_counter()
+    leaves = []
+    packed = []
+    for r, rec in enumerate(recs):
+        entries, cfg, ticks = rec.take_epoch()
+        leaves.append(make_rank_state(r, entries, cfg, REGISTRY))
+        packed.append(pack_ts_blocks(
+            compress_timestamps_blocked(ticks, TS_BLOCK_RECORDS)
+            if len(ticks) else []))
+    delta = tree_reduce_states(leaves)
+    blob = serialize_rank_state(delta)
+    cum.append(delta)
+    merge, cfgs = materialize_state(delta)
+    streaming.write_epoch_segment(
+        trace_dir, epoch, registry=REGISTRY, merge=merge, cfgs=cfgs,
+        rank_ts_blocks=[unpack_ts_blocks(p) for p in packed],
+        state_blob=blob, n_records=n_records, meta_extra={})
+    return time.perf_counter() - t0
+
+
+def sweep(nranks_list, epochs: int, calls_per_epoch: int) -> Dict:
+    rows = []
+    flat: Dict[str, Dict] = {}
+    tmp = tempfile.mkdtemp(prefix="streaming_flush_")
+    window_probe = None
+    try:
+        for nranks in nranks_list:
+            trace_dir = os.path.join(tmp, f"trace_{nranks}")
+            recs = [Recorder(rank=r, config=RecorderConfig())
+                    for r in range(nranks)]
+            cum = streaming.CumulativeState()
+            times = []
+            for e in range(epochs):
+                _feed_epoch(recs, e, calls_per_epoch)
+                dt = _flush_once(recs, cum, trace_dir, e,
+                                 nranks * calls_per_epoch)
+                times.append(dt)
+                rows.append({"nranks": nranks, "epoch": e, "flush_s": dt,
+                             "calls_per_epoch": calls_per_epoch})
+            early = min(times[1:4])
+            late = min(times[-3:])
+            flat[str(nranks)] = {
+                "early_flush_s": early, "late_flush_s": late,
+                "ratio": late / max(early, 1e-9),
+                "flat": late <= FLAT_FACTOR * early + ABS_SLACK_S,
+            }
+            if window_probe is None:
+                # read-side probe on the largest-so-far trace: one epoch's
+                # time window must decompress only intersecting blocks
+                view = TraceReader(trace_dir, mode="stitched").view()
+                store = view.ts_store
+                total = sum(store.n_blocks(r) for r in range(nranks))
+                before = store.blocks_touched
+                t_lo = (epochs - 1) * calls_per_epoch * 2
+                bounds = view.bandwidth_bounds(t_lo, t_lo + 50)
+                touched = store.blocks_touched - before
+                window_probe = {
+                    "blocks_total": total, "blocks_touched": touched,
+                    "n_calls": bounds["n_calls"],
+                    "only_touched_intersecting": 0 < touched < total,
+                }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return {"rows": rows, "flat": flat, "window_probe": window_probe}
+
+
+def main(fast: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    if fast:
+        nranks_list, epochs, calls = (4, 16), 8, 400
+    else:
+        nranks_list, epochs, calls = (4, 16, 64), 16, 2000
+    out = sweep(nranks_list, epochs, calls)
+    out["config"] = {"fast": fast, "epochs": epochs,
+                     "calls_per_epoch": calls, "flat_factor": FLAT_FACTOR,
+                     "abs_slack_s": ABS_SLACK_S,
+                     "ts_block_records": TS_BLOCK_RECORDS}
+    with open(os.path.join(ART, "streaming_flush.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    lines = []
+    for nranks, v in out["flat"].items():
+        lines.append(
+            f"streaming_flush,nranks={nranks},epochs={epochs},"
+            f"early_s={v['early_flush_s']:.4f},late_s={v['late_flush_s']:.4f},"
+            f"ratio={v['ratio']:.2f},flat={v['flat']}")
+        assert v["flat"], (
+            f"per-flush time grew {v['ratio']:.1f}x from early to late "
+            f"epochs at {nranks} ranks -- incremental fold regressed")
+    wp = out["window_probe"]
+    lines.append(
+        f"streaming_flush,window_blocks={wp['blocks_touched']}/"
+        f"{wp['blocks_total']},only_intersecting="
+        f"{wp['only_touched_intersecting']}")
+    assert wp["only_touched_intersecting"], (
+        "time-windowed query decompressed every timestamp block")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main(fast="--smoke" in sys.argv or "--fast" in sys.argv):
+        print(line)

@@ -74,7 +74,7 @@ def save_sharded(tree, ckpt_dir: str, step: int, rank: int = 0,
     tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     if rank == 0 or not os.path.isdir(tmp):
-        posix.mkdir(tmp, 0o755)  # idempotent (exist_ok impl)
+        posix.makedirs(tmp, 0o755)  # idempotent + race-safe across writers
     comm.barrier()
     data_path = os.path.join(tmp, "arrays.bin")
     fh = shardio.shard_open(data_path, 1)

@@ -39,7 +39,12 @@ SPECS = [
     FnSpec("rename", _L, [Arg("src", Role.PATH), Arg("dst", Role.PATH)],
            impl=os.rename),
     FnSpec("unlink", _L, [Arg("path", Role.PATH)], impl=os.unlink),
+    # real POSIX mkdir: creating an existing directory fails with EEXIST
+    # (recorded as an err return); use makedirs for idempotent recursive
+    # creation (the checkpoint engine's commit-dir preparation)
     FnSpec("mkdir", _L, [Arg("path", Role.PATH), Arg("mode", Role.VAL)],
+           impl=os.mkdir),
+    FnSpec("makedirs", _L, [Arg("path", Role.PATH), Arg("mode", Role.VAL)],
            impl=lambda path, mode=0o777: os.makedirs(path, mode, exist_ok=True)),
     FnSpec("rmdir", _L, [Arg("path", Role.PATH)], impl=os.rmdir),
     FnSpec("stat", _L, [Arg("path", Role.PATH)],
@@ -69,6 +74,7 @@ ftruncate = _api.ftruncate
 rename = _api.rename
 unlink = _api.unlink
 mkdir = _api.mkdir
+makedirs = _api.makedirs
 rmdir = _api.rmdir
 stat = _api.stat
 access = _api.access

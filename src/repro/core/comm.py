@@ -78,6 +78,20 @@ class Comm:
                      for i in range(0, len(items), 2)]
         return items[0]
 
+    def gather_tree(self, obj: Any, root: int = 0) -> Optional[List[Any]]:
+        """Gather through the pairwise reduction tree instead of a direct
+        rank-0 fan-in: per-rank payloads travel as concatenated
+        ``(rank, value)`` lists through :meth:`reduce_tree`, so every hop
+        carries one merged list and the root never receives ``size``
+        simultaneous messages (the transport Recorder uses for per-rank
+        timestamp payloads during streaming flushes and tree finalize).
+        Root returns the values in rank order; other ranks return None."""
+        merged = self.reduce_tree([(self.rank, obj)], lambda a, b: a + b,
+                                  root=root)
+        if merged is None:
+            return None
+        return [v for _, v in sorted(merged, key=lambda rv: rv[0])]
+
 
 class SoloComm(Comm):
     rank = 0

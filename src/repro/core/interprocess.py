@@ -779,6 +779,89 @@ def tree_finalize_ranks(rank_csts: List[List[bytes]], rank_cfgs: List[bytes],
 
 
 # ---------------------------------------------------------------------------
+# incremental (cross-epoch) state append -- the streaming finalize core
+# ---------------------------------------------------------------------------
+#
+# A streaming flush reduces only the epoch's DELTA across ranks (O(delta)),
+# then folds the resulting epoch state into a persisted cumulative state
+# with append_epoch_state: occurrence indices of the delta's groups are
+# shifted past the occurrences already accumulated (a per-masked-key
+# counter maintained incrementally, so the fold never rescans the
+# cumulative groups), per-rank terminal streams are concatenated (their
+# grammars via sequitur.concat_grammars, terminal ids shifted past the
+# cumulative rows), and group payloads are inserted untouched.  Per flush
+# this is O(delta groups + unique stream pairs), never O(total);
+# materialize_state over the cumulative state emits a merged trace that is
+# value-identical (records, analyses) to a one-shot finalize of the full
+# call history -- the ROADMAP "incremental finalize" item.
+
+
+def epoch_occ_counts(state: RankState) -> Dict[bytes, int]:
+    """Occurrences per masked signature in one state (dense 0..k-1 group
+    indices, so the count is the number of keys per mkey)."""
+    counts: Dict[bytes, int] = {}
+    for mkey, _occ in state.groups:
+        counts[mkey] = counts.get(mkey, 0) + 1
+    return counts
+
+
+def append_epoch_state(cum: Optional[RankState],
+                       occ_counts: Optional[Dict[bytes, int]],
+                       delta: RankState
+                       ) -> Tuple[RankState, Dict[bytes, int]]:
+    """Fold one epoch's cross-rank merged state into the cumulative state.
+
+    ``cum`` covers the same contiguous rank block as ``delta`` but earlier
+    epochs; ``occ_counts`` is the running per-mkey occurrence counter of
+    ``cum`` (pass the pair returned by the previous call, or ``(None,
+    None)`` to seed from the first epoch).  Returns the new
+    ``(state, occ_counts)``; ``delta`` is absorbed and must not be reused.
+    """
+    from .sequitur import concat_grammars
+
+    if cum is None:
+        return delta, epoch_occ_counts(delta)
+    if occ_counts is None:
+        occ_counts = epoch_occ_counts(cum)
+    if (cum.base, cum.n) != (delta.base, delta.n):
+        raise ValueError(
+            f"append_epoch_state requires matching rank blocks, got "
+            f"[{cum.base},{cum.base + cum.n}) + "
+            f"[{delta.base},{delta.base + delta.n})")
+    groups = dict(cum.groups)
+    key_map: Dict[Tuple[bytes, int], Tuple[bytes, int]] = {}
+    for (mkey, occ), g in delta.groups.items():
+        nk = (mkey, occ_counts.get(mkey, 0) + occ)
+        key_map[(mkey, occ)] = nk
+        groups[nk] = g
+    for mkey, cnt in epoch_occ_counts(delta).items():
+        occ_counts[mkey] = occ_counts.get(mkey, 0) + cnt
+
+    streams: List[Tuple[bytes, tuple]] = []
+    stream_table: Dict[Tuple[bytes, tuple], int] = {}
+    pair_cache: Dict[Tuple[int, int], int] = {}
+    stream_of: List[int] = []
+    for j in range(cum.n):
+        pair = (cum.stream_of[j], delta.stream_of[j])
+        si = pair_cache.get(pair)
+        if si is None:
+            cfg_a, rows_a = cum.streams[pair[0]]
+            cfg_b, rows_b = delta.streams[pair[1]]
+            cfg = concat_grammars([(cfg_a, 0), (cfg_b, len(rows_a))])
+            rows = rows_a + tuple(key_map[k] for k in rows_b)
+            s = (cfg, rows)
+            si = stream_table.get(s)
+            if si is None:
+                si = len(streams)
+                stream_table[s] = si
+                streams.append(s)
+            pair_cache[pair] = si
+        stream_of.append(si)
+    return (RankState(base=cum.base, n=cum.n, groups=groups,
+                      streams=streams, stream_of=stream_of), occ_counts)
+
+
+# ---------------------------------------------------------------------------
 # stable state (de)serialization for tree hops
 # ---------------------------------------------------------------------------
 

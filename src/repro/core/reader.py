@@ -14,16 +14,36 @@ The record-expansion methods here are thin compatibility shims over
 :class:`repro.core.traceview.TraceView` (``self.view()``), which holds the
 batch-decoded columns and answers aggregate queries straight from the
 compressed representation -- prefer it for analysis work.
+
+**Streaming traces** (multi-segment directories written by
+``Recorder.flush``) open through the same class: committed epoch segments
+are stitched into one logical trace (``streaming.stitch_segments``),
+value-identical to a one-shot finalize of the same calls.  ``mode``
+selects what is read:
+
+  ``auto``      the merged trace when a clean finalize wrote one (and it
+                is intact), else the stitched segments; plain single-file
+                traces read as before.
+  ``stitched``  always stitch the committed segments.
+  ``tail``      only the newest committed segment (live monitoring of a
+                running job).
+  ``merged``    require the merged trace; error if absent/corrupt.
+
+Segments that fail their manifest size check (post-commit truncation) are
+skipped and reported in ``self.skipped`` -- the reader still serves every
+intact committed epoch.
 """
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
-from typing import Any, Iterator, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
+from . import streaming, trace_format
 from .encoding import IterPattern, RankPattern
 from .sequitur import parse_grammar
-from .trace_format import read_trace_files
+from .trace_format import TraceFormatError, read_trace_files
 
 
 @dataclass
@@ -53,17 +73,93 @@ def _resolve_rank(v: Any, rank: int) -> Any:
     return v
 
 
+_MODES = ("auto", "stitched", "tail", "merged")
+
+
 class TraceReader:
-    def __init__(self, trace_dir: str):
-        data = read_trace_files(trace_dir)
+    def __init__(self, trace_dir: str, mode: str = "auto"):
+        if mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+        self.mode = mode
+        self.skipped: List[Dict[str, str]] = []
+        self.n_segments = 1
+        if trace_format.is_stream_dir(trace_dir):
+            self._init_stream(trace_dir, mode)
+        else:
+            if mode != "auto":
+                raise TraceFormatError(
+                    f"mode {mode!r} needs a streaming trace directory, but "
+                    f"{trace_dir!r} is a plain single-segment trace")
+            self._init_single(read_trace_files(trace_dir))
+        self.functions = {int(k): v for k, v in self.meta["functions"].items()}
+        self.nranks = self.meta["nranks"]
+        self._view = None
+
+    def _init_single(self, data: Dict[str, Any]) -> None:
         self.meta = data["meta"]
         self.merged_cst: List[bytes] = data["merged_cst"]
         self.unique_cfgs = [parse_grammar(c) for c in data["unique_cfgs"]]
         self.cfg_index: List[int] = data["cfg_index"]
-        self.rank_ts = data["rank_timestamps"]
-        self.functions = {int(k): v for k, v in self.meta["functions"].items()}
-        self.nranks = self.meta["nranks"]
-        self._view = None
+        self.ts_store = streaming.make_ts_store(data)
+
+    def _read_segment(self, trace_dir: str,
+                      entry: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        """One manifest entry via :func:`trace_format.load_segment`; on
+        failure, record the reason in ``self.skipped`` and return None."""
+        data, reason = trace_format.load_segment(trace_dir, entry)
+        if data is None:
+            self.skipped.append({"segment": entry["name"], "reason": reason})
+        return data
+
+    def _init_stream(self, trace_dir: str, mode: str) -> None:
+        # decode lazily per mode: `merged` / `tail` open O(1) segments no
+        # matter how many epochs the run committed; only a stitched read
+        # pays O(total).  The cheap metadata-only version check always runs.
+        manifest = trace_format.read_manifest(trace_dir)
+        entries = manifest.get("segments", [])
+        trace_format.check_segment_versions(trace_dir, entries)
+        merged_entry = manifest.get("merged")
+        if mode in ("auto", "merged") and merged_entry is not None:
+            reason = trace_format.validate_segment(trace_dir, merged_entry)
+            if reason is None:
+                self._init_single(read_trace_files(
+                    os.path.join(trace_dir, merged_entry["name"])))
+                return
+            if mode == "merged":
+                raise TraceFormatError(
+                    f"merged trace of {trace_dir!r} is unusable: {reason}")
+            self.skipped.append({"segment": merged_entry["name"],
+                                 "reason": reason})
+        elif mode == "merged":
+            raise TraceFormatError(
+                f"{trace_dir!r} has no merged trace (the run was not "
+                f"cleanly finalized, or retention pruning disabled it); "
+                f"use mode='stitched' for the committed epochs")
+        if mode == "tail":
+            # newest intact segment: walk backwards, stop at first success
+            datas = []
+            for entry in reversed(entries):
+                data = self._read_segment(trace_dir, entry)
+                if data is not None:
+                    datas = [data]
+                    break
+        else:
+            # full stitch: the one shared definition of "read a stream
+            # directory" (trace_format.read_stream_trace) owns the loop
+            stream = trace_format.read_stream_trace(trace_dir)
+            self.skipped.extend(stream["skipped"])
+            datas = [s["data"] for s in stream["segments"]]
+        if not datas:
+            raise TraceFormatError(
+                f"no intact epoch segments in {trace_dir!r} "
+                f"(skipped: {[s['reason'] for s in self.skipped]})")
+        st = streaming.stitch_segments(datas)
+        self.meta = st["meta"]
+        self.merged_cst = st["merged_cst"]
+        self.unique_cfgs = [parse_grammar(c) for c in st["unique_cfgs"]]
+        self.cfg_index = st["cfg_index"]
+        self.ts_store = st["ts_store"]
+        self.n_segments = st["n_segments"]
 
     def view(self) -> "TraceView":  # noqa: F821  (lazy import below)
         """The compressed-domain columnar query API over this trace

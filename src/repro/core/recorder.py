@@ -25,6 +25,7 @@ import socket
 import sys
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
@@ -38,7 +39,34 @@ from .patterns import IntraPatternTracker
 from .sequitur import Sequitur
 from .specs import REGISTRY, FunctionRegistry, Role
 from .timestamps import TimestampBuffer, compress_timestamps
-from . import trace_format
+from . import streaming, trace_format
+
+
+def _env_int(name: str, minimum: int = 1) -> Optional[int]:
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return None
+    try:
+        v = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name} must be an integer, got {raw!r}") from None
+    if v < minimum:
+        raise ValueError(f"{name} must be >= {minimum}, got {v}")
+    return v
+
+
+def _env_float(name: str, minimum: float = 0.0) -> Optional[float]:
+    raw = os.environ.get(name)
+    if raw is None or raw == "":
+        return None
+    try:
+        v = float(raw)
+    except ValueError:
+        raise ValueError(f"{name} must be a number, got {raw!r}") from None
+    if not v > minimum:
+        raise ValueError(f"{name} must be > {minimum}, got {v}")
+    return v
 
 
 @dataclass
@@ -55,10 +83,43 @@ class RecorderConfig:
     # "flat": the original gather-at-root pass, kept for bit-compat checks
     # (both produce byte-identical traces; see tests/test_tree_finalize.py).
     finalize_topology: str = "tree"
+    # -- streaming (epoch flush) knobs; see core/streaming.py ----------------
+    # auto-flush after this many locally recorded calls since the last flush
+    flush_every_n_records: Optional[int] = None
+    # auto-flush when this much wall time passed since the last flush
+    flush_interval_s: Optional[float] = None
+    # keep only the newest K committed epoch segments (live-monitoring ring)
+    max_epochs_retained: Optional[int] = None
+    # records per zlib block in the segment timestamp index
+    ts_block_records: int = 4096
+
+    def __post_init__(self) -> None:
+        # the same bounds from_env enforces, so directly-constructed
+        # configs (the README path) cannot silently degenerate -- e.g.
+        # flush_every_n_records=0 would otherwise flush on EVERY record
+        if (self.flush_every_n_records is not None
+                and self.flush_every_n_records < 1):
+            raise ValueError("flush_every_n_records must be >= 1, got "
+                             f"{self.flush_every_n_records}")
+        if self.flush_interval_s is not None and not self.flush_interval_s > 0:
+            raise ValueError("flush_interval_s must be > 0, got "
+                             f"{self.flush_interval_s}")
+        if (self.max_epochs_retained is not None
+                and self.max_epochs_retained < 1):
+            raise ValueError("max_epochs_retained must be >= 1, got "
+                             f"{self.max_epochs_retained}")
+        if self.ts_block_records < 1:
+            raise ValueError(
+                f"ts_block_records must be >= 1, got {self.ts_block_records}")
 
     @classmethod
     def from_env(cls, **overrides) -> "RecorderConfig":
-        """Environment-variable control, as in the original tool."""
+        """Environment-variable control, as in the original tool.
+
+        Malformed streaming knobs raise ``ValueError`` naming the variable
+        -- a long job silently falling back to "never flush" would defeat
+        the crash-durability the knobs exist for.
+        """
         cfg = cls(**overrides)
         layers = os.environ.get("RECORDER_LAYERS")
         if layers:
@@ -73,6 +134,18 @@ class RecorderConfig:
         topo = os.environ.get("RECORDER_FINALIZE_TOPOLOGY")
         if topo:
             cfg.finalize_topology = topo
+        n = _env_int("RECORDER_FLUSH_EVERY_N_RECORDS")
+        if n is not None:
+            cfg.flush_every_n_records = n
+        s = _env_float("RECORDER_FLUSH_INTERVAL_S")
+        if s is not None:
+            cfg.flush_interval_s = s
+        k = _env_int("RECORDER_MAX_EPOCHS_RETAINED")
+        if k is not None:
+            cfg.max_epochs_retained = k
+        b = _env_int("RECORDER_TS_BLOCK_RECORDS")
+        if b is not None:
+            cfg.ts_block_records = b
         return cfg
 
 
@@ -84,6 +157,7 @@ class RecorderStats:
     cfg_bytes: int = 0
     cst_bytes: int = 0
     ts_bytes: int = 0
+    epochs: int = 0   # committed streaming flushes (0 for one-shot traces)
 
 
 class _ThreadState(threading.local):
@@ -93,7 +167,8 @@ class _ThreadState(threading.local):
 
 class Recorder:
     def __init__(self, rank: int = 0, config: Optional[RecorderConfig] = None,
-                 registry: FunctionRegistry = REGISTRY) -> None:
+                 registry: FunctionRegistry = REGISTRY,
+                 comm: Optional[Comm] = None) -> None:
         self.rank = rank
         self.config = config or RecorderConfig()
         self.registry = registry
@@ -112,6 +187,17 @@ class Recorder:
         self.n_records = 0
         self.n_skipped = 0
         self._finalized = False
+        # -- streaming state (core/streaming.py) --------------------------------
+        self._comm = comm                 # default comm for flush/finalize
+        self.epoch = 0                    # committed flushes so far
+        self._records_at_flush = 0
+        self._last_flush_t = time.perf_counter()
+        self._flush_lock = threading.Lock()
+        self._autoflush_broken = False
+        # rank 0 only: the O(delta)-per-flush cross-epoch accumulator, and
+        # summed per-flush byte sizes for the final RecorderStats
+        self._cum = streaming.CumulativeState()
+        self._stream_totals = RecorderStats()
 
     # -- wrapper support ------------------------------------------------------
 
@@ -155,92 +241,100 @@ class Recorder:
                t0: int, t1: int) -> None:
         spec = self.registry.spec(func_id)
         with self._lock:
-            tidx = self._thread_index(threading.get_ident())
-            norm: List[Any] = []
-            offsets: List[int] = []
-            offset_slots: List[int] = []
-            handle_ids: List[int] = []
-            keyparts: List[Any] = []
-            prefixes = self.config.path_prefixes
-            for i, arg in enumerate(raw_args):
-                role = spec.args[i].role if i < len(spec.args) else Role.VAL
-                if role == Role.PATH:
-                    p = str(arg)
-                    if prefixes is not None and not any(
-                            p.startswith(x) for x in prefixes):
-                        # filtered out: skip the record entirely; if this call
-                        # creates a handle, remember it as untracked
-                        if spec.ret_role == Role.HANDLE and ret is not None:
-                            self._untracked.add(ret)
-                        self.n_skipped += 1
-                        return
-                    norm.append(p)
-                    keyparts.append(p)
-                elif role == Role.HANDLE:
-                    if arg in self._untracked:
-                        self.n_skipped += 1
-                        return
-                    h = self._handles.get(arg)
-                    if h is None:
-                        # handle from before tracing started: late-register
-                        h = self._alloc_handle()
-                        self._handles[arg] = h
-                    norm.append(h)
-                    handle_ids.append(h.id)
-                elif role == Role.OFFSET:
-                    offsets.append(int(arg))
-                    offset_slots.append(len(norm))
-                    norm.append(None)  # placeholder, filled below
-                elif role == Role.BUF:
-                    v = len(arg) if hasattr(arg, "__len__") else (
-                        int(arg) if isinstance(arg, int) else None)
-                    norm.append(v)
-                    keyparts.append(v)
-                else:  # SIZE / VAL
-                    norm.append(arg)
-                    keyparts.append(arg)
+            self._record_locked(spec, func_id, raw_args, ret, depth, t0, t1)
+        if self._tls.depth == 0:
+            # auto-flush only from top-level calls (a flush inside a layered
+            # call would split parent and child records across epochs)
+            self._maybe_autoflush()
 
-            # normalize the return value
-            is_err = isinstance(ret, tuple) and len(ret) == 2 and ret[0] == "err"
-            if spec.ret_role == Role.HANDLE and ret is not None and not is_err:
-                # layered opens (shard_open -> posix.open) return the same
-                # raw handle: they share one unified id (paper Section 3.2.2)
-                h = self._handles.get(ret)
+    def _record_locked(self, spec, func_id: int, raw_args: tuple, ret: Any,
+                       depth: int, t0: int, t1: int) -> None:
+        tidx = self._thread_index(threading.get_ident())
+        norm: List[Any] = []
+        offsets: List[int] = []
+        offset_slots: List[int] = []
+        handle_ids: List[int] = []
+        keyparts: List[Any] = []
+        prefixes = self.config.path_prefixes
+        for i, arg in enumerate(raw_args):
+            role = spec.args[i].role if i < len(spec.args) else Role.VAL
+            if role == Role.PATH:
+                p = str(arg)
+                if prefixes is not None and not any(
+                        p.startswith(x) for x in prefixes):
+                    # filtered out: skip the record entirely; if this call
+                    # creates a handle, remember it as untracked
+                    if spec.ret_role == Role.HANDLE and ret is not None:
+                        self._untracked.add(ret)
+                    self.n_skipped += 1
+                    return
+                norm.append(p)
+                keyparts.append(p)
+            elif role == Role.HANDLE:
+                if arg in self._untracked:
+                    self.n_skipped += 1
+                    return
+                h = self._handles.get(arg)
                 if h is None:
+                    # handle from before tracing started: late-register
                     h = self._alloc_handle()
-                    self._handles[ret] = h
-                nret: Any = h
-            elif spec.ret_role == Role.BUF and hasattr(ret, "__len__"):
-                nret = len(ret)
-            else:
-                nret = ret
-            if isinstance(nret, Handle):
-                key_ret: Any = ("h", nret.id)
-            else:
-                key_ret = nret
+                    self._handles[arg] = h
+                norm.append(h)
+                handle_ids.append(h.id)
+            elif role == Role.OFFSET:
+                offsets.append(int(arg))
+                offset_slots.append(len(norm))
+                norm.append(None)  # placeholder, filled below
+            elif role == Role.BUF:
+                v = len(arg) if hasattr(arg, "__len__") else (
+                    int(arg) if isinstance(arg, int) else None)
+                norm.append(v)
+                keyparts.append(v)
+            else:  # SIZE / VAL
+                norm.append(arg)
+                keyparts.append(arg)
 
-            # OFFSET-role returns (e.g. lseek's resulting offset) join the
-            # pattern run; they cannot be part of the pattern key then.
-            ret_is_offset = (spec.ret_role == Role.OFFSET
-                             and isinstance(nret, int) and not is_err)
+        # normalize the return value
+        is_err = isinstance(ret, tuple) and len(ret) == 2 and ret[0] == "err"
+        if spec.ret_role == Role.HANDLE and ret is not None and not is_err:
+            # layered opens (shard_open -> posix.open) return the same
+            # raw handle: they share one unified id (paper Section 3.2.2)
+            h = self._handles.get(ret)
+            if h is None:
+                h = self._alloc_handle()
+                self._handles[ret] = h
+            nret: Any = h
+        elif spec.ret_role == Role.BUF and hasattr(ret, "__len__"):
+            nret = len(ret)
+        else:
+            nret = ret
+        if isinstance(nret, Handle):
+            key_ret: Any = ("h", nret.id)
+        else:
+            key_ret = nret
 
-            # intra-process I/O pattern encoding (paper §3.2.1)
-            if offsets or ret_is_offset:
-                key = (func_id, tidx, tuple(handle_ids), tuple(keyparts),
-                       None if ret_is_offset else key_ret)
-                vals = offsets + ([nret] if ret_is_offset else [])
-                encoded = self.intra.encode(key, vals)
-                for slot, val in zip(offset_slots, encoded):
-                    norm[slot] = val
-                if ret_is_offset:
-                    nret = encoded[-1]
+        # OFFSET-role returns (e.g. lseek's resulting offset) join the
+        # pattern run; they cannot be part of the pattern key then.
+        ret_is_offset = (spec.ret_role == Role.OFFSET
+                         and isinstance(nret, int) and not is_err)
 
-            sig = trace_format.make_signature(func_id, tidx, depth, tuple(norm), nret)
-            terminal = self.cst.intern(sig)
-            self.grammar.push(terminal)
-            if self.config.timestamps:
-                self.timestamps.append(t0, t1)
-            self.n_records += 1
+        # intra-process I/O pattern encoding (paper §3.2.1)
+        if offsets or ret_is_offset:
+            key = (func_id, tidx, tuple(handle_ids), tuple(keyparts),
+                   None if ret_is_offset else key_ret)
+            vals = offsets + ([nret] if ret_is_offset else [])
+            encoded = self.intra.encode(key, vals)
+            for slot, val in zip(offset_slots, encoded):
+                norm[slot] = val
+            if ret_is_offset:
+                nret = encoded[-1]
+
+        sig = trace_format.make_signature(func_id, tidx, depth, tuple(norm), nret)
+        terminal = self.cst.intern(sig)
+        self.grammar.push(terminal)
+        if self.config.timestamps:
+            self.timestamps.append(t0, t1)
+        self.n_records += 1
 
     def forget_handle(self, raw: Any) -> None:
         """Called by close-style wrappers after recording."""
@@ -249,6 +343,129 @@ class Recorder:
             if h is not None:
                 self._free_handles.add(h.id)
             self._untracked.discard(raw)
+
+    # -- streaming epoch flushes (core/streaming.py) --------------------------
+
+    def _is_streaming(self) -> bool:
+        return (self.epoch > 0
+                or self.config.flush_every_n_records is not None
+                or self.config.flush_interval_s is not None)
+
+    def take_epoch(self) -> Tuple[List[bytes], bytes, Any]:
+        """Snapshot and reset the live per-rank state: returns the epoch's
+        (CST entries, serialized CFG, raw tick array) and restarts the CST,
+        grammar and intra-pattern tracker for the next epoch.  Handle ids
+        and the tick clock persist across epochs, so cross-epoch streams
+        stitch back into the exact one-shot record sequence."""
+        with self._lock:
+            entries = self.cst.entries
+            cfg = self.grammar.serialize()
+            ticks = self.timestamps.take()
+            self.cst = CST()
+            self.grammar = Sequitur()
+            self.intra = IntraPatternTracker(
+                enabled=self.config.intra_patterns)
+            self._records_at_flush = self.n_records
+        return entries, cfg, ticks
+
+    def flush(self, comm: Optional[Comm] = None,
+              trace_dir: Optional[str] = None) -> Optional[Dict[str, Any]]:
+        """Commit one epoch segment without stopping tracing (collective:
+        every rank of ``comm`` must call it in the same order).
+
+        The epoch delta is reduced across ranks through
+        ``comm.reduce_tree`` (O(delta), O(log N) rounds); timestamps ride
+        the same tree as block-indexed zlib blocks via
+        ``comm.gather_tree``.  Rank 0 folds the delta into the cumulative
+        state, writes ``epoch_NNNNN/`` (atomic rename + manifest rewrite)
+        and returns the manifest entry; other ranks return None.
+        """
+        if self._finalized:
+            raise RuntimeError("recorder already finalized")
+        comm = comm or self._comm or SoloComm()
+        trace_dir = trace_dir or self.config.trace_dir
+        if not trace_dir:
+            raise ValueError("flush requires a trace_dir")
+        with self._flush_lock:
+            if self._finalized:  # re-check: finalize may have won the lock
+                raise RuntimeError("recorder already finalized")
+            return self._flush_locked(comm, trace_dir)
+
+    def _flush_locked(self, comm: Comm, trace_dir: str
+                      ) -> Optional[Dict[str, Any]]:
+        entries, cfg, ticks = self.take_epoch()
+        epoch = self.epoch
+        self.epoch += 1
+        self._last_flush_t = time.perf_counter()
+        entry = streaming.run_flush(
+            comm, entries=entries, cfg=cfg, ticks=ticks,
+            registry=self.registry, trace_dir=trace_dir, epoch=epoch,
+            cum=self._cum, inter_patterns=self.config.inter_patterns,
+            ts_block_records=self.config.ts_block_records,
+            max_epochs_retained=self.config.max_epochs_retained,
+            meta_extra=self._metadata(comm.size))
+        if entry is not None:
+            t = self._stream_totals
+            t.epochs += 1
+            t.cst_entries += entry["cst_entries"]
+            t.cfg_bytes += entry["files"]["unique_cfgs.bin"]
+            t.cst_bytes += entry["files"]["merged_cst.bin"]
+            t.ts_bytes += entry["files"]["timestamps.bin"]
+        return entry
+
+    def _flush_due(self) -> bool:
+        cfg = self.config
+        if (cfg.flush_every_n_records is not None
+                and self.n_records - self._records_at_flush
+                >= cfg.flush_every_n_records):
+            return True
+        return (cfg.flush_interval_s is not None
+                and time.perf_counter() - self._last_flush_t
+                >= cfg.flush_interval_s)
+
+    def _maybe_autoflush(self) -> None:
+        """Auto-flush on the configured record-count / wall-time cadence.
+
+        Cadence is evaluated per rank against the recorder's own comm
+        (default Solo): multi-rank jobs should either flush explicitly at
+        collective points or construct the Recorder with a comm whose ranks
+        hit the cadence together (SPMD record counts).
+
+        Concurrent recording threads race the dueness check, so it is
+        re-evaluated under the flush lock and a thread that finds a flush
+        already in progress simply moves on -- one cadence crossing
+        produces exactly one epoch, never a spurious empty second one.
+
+        Auto-flush runs inside the application's traced call, so a trace-
+        volume failure (ENOSPC, removed trace_dir) must not surface -- or
+        worse, REPLACE an in-flight exception -- in an unrelated I/O call:
+        the failure is warned once and auto-flush disables itself; explicit
+        ``flush()`` / ``finalize()`` still raise.
+        """
+        cfg = self.config
+        if (cfg.trace_dir is None or self._finalized
+                or self._autoflush_broken
+                or (cfg.flush_every_n_records is None
+                    and cfg.flush_interval_s is None)):
+            return
+        if not self._flush_due():
+            return
+        if not self._flush_lock.acquire(blocking=False):
+            return  # another thread is flushing this very crossing
+        try:
+            # re-check under the lock: the flush we raced may have
+            # satisfied the cadence, or finalize may have completed
+            if not self._finalized and self._flush_due():
+                self._flush_locked(self._comm or SoloComm(), cfg.trace_dir)
+        except Exception as e:
+            self._autoflush_broken = True
+            warnings.warn(
+                f"recorder auto-flush failed ({type(e).__name__}: {e}); "
+                f"auto-flush disabled, tracing continues -- call flush() "
+                f"or finalize() explicitly to surface the error",
+                RuntimeWarning)
+        finally:
+            self._flush_lock.release()
 
     # -- finalization (paper §3.3) --------------------------------------------
 
@@ -267,14 +484,48 @@ class Recorder:
         ``comm.reduce_tree`` in O(log N) rounds (each hop merges two
         contiguous rank blocks, so rank 0 only materializes the already
         merged state); ``"flat"`` gathers every raw CST/CFG to rank 0 and
-        merges there.  Both write byte-identical traces; timestamps are
-        per-rank payload either way and always travel by gather.
+        merges there.  Both write byte-identical traces; tree timestamps
+        travel as one concatenated payload per hop (``comm.gather_tree``),
+        bounding rank-0 fan-in, while flat keeps the reference gather.
+
+        **Streaming runs** (any flush happened, or flush cadence knobs are
+        set) finalize differently: the remaining tail is flushed as the
+        last epoch segment and rank 0 materializes the cumulative
+        cross-epoch state into ``<trace_dir>/merged`` -- the incremental
+        finalize: no re-reduction of earlier epochs ever happens.
         """
         if self._finalized:
             raise RuntimeError("recorder already finalized")
-        self._finalized = True
-        comm = comm or SoloComm()
+        comm = comm or self._comm or SoloComm()
         trace_dir = trace_dir or self.config.trace_dir
+        if self._is_streaming():
+            if not trace_dir:
+                raise ValueError("streaming finalize requires a trace_dir")
+            # flush the tail; skippable only when provably empty AND the
+            # decision needs no agreement (solo comm) -- multi-rank flushes
+            # are collective, so every rank must make the same call.  The
+            # _finalized flip happens under the flush lock so a racing
+            # auto-flush can never commit an epoch after the tail (it
+            # re-checks the flag under the same lock).
+            with self._flush_lock:
+                if (comm.size > 1 or self.epoch == 0
+                        or self.n_records > self._records_at_flush):
+                    self._flush_locked(comm, trace_dir)
+                self._finalized = True
+            if comm.rank != 0:
+                comm.barrier()
+                return None
+            if self.config.max_epochs_retained is None:
+                streaming.write_merged_trace(
+                    trace_dir, self._cum, registry=self.registry,
+                    inter_patterns=self.config.inter_patterns,
+                    meta_extra=self._metadata(comm.size))
+            stats = self._stream_totals
+            stats.n_records = self.n_records
+            stats.n_skipped = self.n_skipped
+            comm.barrier()
+            return stats
+        self._finalized = True
         if self.config.finalize_topology not in ("tree", "flat"):
             raise ValueError(
                 f"finalize_topology must be 'tree' or 'flat', got "
@@ -284,7 +535,7 @@ class Recorder:
             leaf = make_rank_state(comm.rank, entries, cfg, self.registry)
             blob = comm.reduce_tree(serialize_rank_state(leaf),
                                     merge_serialized_states)
-            ts_gathered = comm.gather(ts)
+            ts_gathered = comm.gather_tree(ts)
             if comm.rank != 0:
                 comm.barrier()
                 return None
@@ -378,7 +629,8 @@ class session:
         self.stats: Optional[RecorderStats] = None
 
     def __enter__(self) -> Recorder:
-        self.recorder = Recorder(rank=self.rank, config=self.config)
+        self.recorder = Recorder(rank=self.rank, config=self.config,
+                                 comm=self.comm)
         attach(self.recorder)
         return self.recorder
 

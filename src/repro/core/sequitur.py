@@ -354,6 +354,37 @@ def remap_grammar(buf: bytes, terminal_map: Dict[int, int]) -> bytes:
     return serialize_grammar(out)
 
 
+def concat_grammars(parts: List[Tuple[bytes, int]]) -> bytes:
+    """Concatenate serialized grammars into one whose expansion is the
+    concatenation of the parts' expansions (streaming epoch append).
+
+    Each part is ``(serialized grammar, terminal offset)``: the part's
+    terminal ids are shifted by the offset (per-epoch CSTs restart at 0, so
+    epoch k's terminals live after epoch k-1's rows in the combined
+    stream).  The parts' start-rule items are spliced into the combined
+    start rule; their non-start rules are appended with references
+    renumbered.  The result is NOT what one-shot Sequitur would induce over
+    the concatenated stream -- only its expansion is guaranteed equal --
+    which is exactly the value-identity the stitched readers need.
+    """
+    out_rules: List[List[Tuple[int, int]]] = [[]]
+    for cfg, toff in parts:
+        rules = parse_grammar(cfg)
+        if not rules:
+            continue
+        base = len(out_rules)  # where this part's rules 1.. land
+
+        def remap(code: int, base: int = base, toff: int = toff) -> int:
+            if code & 1:
+                return 2 * (base + (code >> 1) - 1) + 1
+            return 2 * ((code >> 1) + toff)
+
+        out_rules[0].extend((remap(c), e) for c, e in rules[0])
+        for items in rules[1:]:
+            out_rules.append([(remap(c), e) for c, e in items])
+    return serialize_grammar(out_rules)
+
+
 def expand_grammar(rules: List[List[Tuple[int, int]]]) -> Iterator[int]:
     """Yield the terminal stream of a parsed grammar (rule 0 is start).
 

@@ -1,0 +1,460 @@
+"""Streaming trace subsystem: epoch flushes and incremental finalize.
+
+The one-shot pipeline (record -> ``Recorder.finalize`` at exit) gives a
+long-running job no trace at all if it is preempted mid-run.  This module
+adds **run-while-tracing** durability on top of the paper's compression
+machinery (the mergeable :class:`~repro.core.interprocess.RankState`s of
+Section 3.2.2/3.3):
+
+``Recorder.flush`` (a collective)
+    snapshots every rank's live CST/CFG/timestamp state into an **epoch
+    delta** without stopping tracing, reduces ONLY that delta across ranks
+    through ``Comm.reduce_tree`` (O(log N) rounds over serialized states),
+    and commits one crash-durable **epoch segment** -- a complete five-file
+    mini trace of the flush window, plus the epoch's serialized cross-rank
+    state (``state.bin``).  Per-rank timestamp payloads ride the same
+    reduction tree (``Comm.gather_tree``) as block-indexed zlib blocks, so
+    rank 0 never absorbs ``size`` simultaneous messages.
+
+:class:`CumulativeState` (incremental finalize)
+    rank 0 folds each epoch's reduced delta into a running cross-epoch
+    state in **O(delta)** -- groups are inserted into one mutable dict and
+    per-rank terminal streams are kept as lists of epoch parts whose
+    concatenation is deferred to :meth:`CumulativeState.to_rank_state`.  A
+    clean ``finalize`` therefore materializes the full merged trace from
+    the already-merged state instead of re-reducing the whole history
+    (``merged/`` in the trace directory).  The pure reference semantics
+    live in :func:`interprocess.append_epoch_state`; the two are
+    property-tested to produce identical states.
+
+Multi-segment trace directory (``trace_format`` streaming layout)
+    ``manifest.json`` lists committed segments with per-file byte sizes;
+    segments are written under ``.tmp`` names and committed by atomic
+    rename + atomic manifest rewrite, so a crash can never expose a
+    half-written segment, and post-commit corruption (truncation) is
+    detected from the recorded sizes and the segment skipped on read.
+
+:func:`stitch_segments` (the read side)
+    concatenates committed segments back into ONE logical trace: merged
+    CSTs are concatenated (per-segment terminal offsets), per-rank CFGs
+    are spliced with :func:`sequitur.concat_grammars` (expansion ==
+    concatenation of the epochs' streams), and timestamps are served by a
+    :class:`StitchedTimestampStore` over the per-segment block indexes --
+    so every existing ``TraceView`` query runs unchanged on a streaming
+    trace, value-identical to a one-shot finalize of the same calls
+    (property-tested in ``tests/test_streaming.py``).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import trace_format
+from .interprocess import (CfgResult, MergeResult, RankState,
+                           deserialize_rank_state, epoch_occ_counts,
+                           make_rank_state, materialize_state,
+                           merge_serialized_states, serialize_rank_state)
+from .sequitur import concat_grammars, parse_grammar, terminal_counts
+from .specs import FunctionRegistry
+from .timestamps import (BlockedTimestampStore, TimestampStore, TsBlock,
+                         compress_timestamps_blocked, pack_ts_blocks,
+                         unpack_ts_blocks)
+
+MERGED_DIR = "merged"
+
+
+# ---------------------------------------------------------------------------
+# incremental cross-epoch accumulation (rank 0)
+# ---------------------------------------------------------------------------
+
+
+class CumulativeState:
+    """O(delta)-per-epoch accumulator of reduced epoch states.
+
+    Semantically equivalent to folding epochs through the pure reference
+    :func:`interprocess.append_epoch_state` (the two produce byte-identical
+    serialized states), but built for streaming: ``append`` never rescans
+    earlier epochs.  Groups land in one mutable dict keyed by
+    occurrence-shifted ``(masked signature, occ)``; per-rank terminal
+    streams are kept as sequences of deduplicated **epoch parts** and only
+    concatenated (grammars via :func:`sequitur.concat_grammars`) when
+    :meth:`to_rank_state` materializes the final merged state.
+    """
+
+    def __init__(self) -> None:
+        self.base: Optional[int] = None
+        self.n: Optional[int] = None
+        self.groups: Dict[Tuple[bytes, int], Any] = {}
+        self.occ_counts: Dict[bytes, int] = {}
+        # unique (cfg bytes, occurrence-shifted row gkeys) epoch stream parts
+        self.parts: List[Tuple[bytes, tuple]] = []
+        self.rank_parts: List[List[int]] = []  # per local rank: part indices
+        self.n_epochs = 0
+
+    def append(self, delta: RankState) -> None:
+        """Fold one epoch's cross-rank reduced state in.  O(delta groups +
+        delta stream rows + nranks); ``delta`` is absorbed."""
+        if self.n is None:
+            self.base, self.n = delta.base, delta.n
+            self.rank_parts = [[] for _ in range(delta.n)]
+        elif (self.base, self.n) != (delta.base, delta.n):
+            raise ValueError(
+                f"epoch covers ranks [{delta.base},{delta.base + delta.n}), "
+                f"cumulative state covers [{self.base},{self.base + self.n})")
+        occ = self.occ_counts
+        key_map: Dict[Tuple[bytes, int], Tuple[bytes, int]] = {}
+        for (mkey, j), g in delta.groups.items():
+            nk = (mkey, occ.get(mkey, 0) + j)
+            key_map[(mkey, j)] = nk
+            self.groups[nk] = g
+        for mkey, cnt in epoch_occ_counts(delta).items():
+            occ[mkey] = occ.get(mkey, 0) + cnt
+        part_of = []
+        for cfg_e, rows_e in delta.streams:
+            part_of.append(len(self.parts))
+            self.parts.append((cfg_e, tuple(key_map[k] for k in rows_e)))
+        for j, si in enumerate(delta.stream_of):
+            self.rank_parts[j].append(part_of[si])
+        self.n_epochs += 1
+
+    def to_rank_state(self) -> RankState:
+        """Materialize the cross-epoch merged state (O(total), finalize
+        only): per rank, splice its epoch parts into one stream.  Ranks
+        sharing the same part sequence share one stitched stream, so SPMD
+        workloads still cost one concatenation, not N."""
+        if self.n is None:
+            raise ValueError("no epochs appended")
+        streams: List[Tuple[bytes, tuple]] = []
+        table: Dict[tuple, int] = {}
+        stream_of: List[int] = []
+        for j in range(self.n):
+            combo = tuple(self.rank_parts[j])
+            si = table.get(combo)
+            if si is None:
+                rows: List[Tuple[bytes, int]] = []
+                gparts: List[Tuple[bytes, int]] = []
+                for pi in combo:
+                    cfg_e, rows_e = self.parts[pi]
+                    gparts.append((cfg_e, len(rows)))
+                    rows.extend(rows_e)
+                si = len(streams)
+                table[combo] = si
+                streams.append((concat_grammars(gparts), tuple(rows)))
+            stream_of.append(si)
+        return RankState(base=self.base, n=self.n, groups=dict(self.groups),
+                         streams=streams, stream_of=stream_of)
+
+
+# ---------------------------------------------------------------------------
+# segment commit + manifest maintenance (rank 0)
+# ---------------------------------------------------------------------------
+
+
+def _load_or_init_manifest(trace_dir: str, nranks: int) -> Dict[str, Any]:
+    if trace_format.is_stream_dir(trace_dir):
+        return trace_format.read_manifest(trace_dir)
+    return {"format_version": trace_format.FORMAT_VERSION,
+            "nranks": nranks, "segments": []}
+
+
+def write_epoch_segment(trace_dir: str, epoch: int, *,
+                        registry: FunctionRegistry, merge: MergeResult,
+                        cfgs: CfgResult,
+                        rank_ts_blocks: List[Sequence[TsBlock]],
+                        state_blob: bytes, n_records: int,
+                        meta_extra: Optional[Dict[str, Any]] = None
+                        ) -> Dict[str, Any]:
+    """Commit one epoch segment: write the five-file mini trace plus
+    ``state.bin`` under a ``.tmp`` name, atomically rename it in, then
+    atomically rewrite the manifest with the segment's file sizes (the
+    crash-recovery ground truth).  Returns the manifest entry.
+
+    A restarted job may reuse the trace directory of a preempted run: the
+    committed epoch number always continues past the manifest's newest
+    segment (whatever the caller's local counter says), so run B's epochs
+    append after run A's instead of colliding with them, and any stale
+    ``merged`` trace (it no longer covers every epoch) is dropped from the
+    manifest before the new segment becomes visible.
+    """
+    os.makedirs(trace_dir, exist_ok=True)
+    manifest = _load_or_init_manifest(trace_dir, len(cfgs.cfg_index))
+    segments = manifest.get("segments", [])
+    if segments:
+        epoch = max(epoch, max(e["epoch"] for e in segments) + 1)
+    name = trace_format.segment_name(epoch)
+    tmp = os.path.join(trace_dir, name + ".tmp")
+    if os.path.exists(tmp):  # debris from a crashed earlier attempt
+        shutil.rmtree(tmp)
+    sizes = trace_format.write_trace(
+        tmp, registry=registry, merged_cst=merge.merged_entries,
+        unique_cfgs=cfgs.unique_cfgs, cfg_index=cfgs.cfg_index,
+        rank_ts_blocks=rank_ts_blocks, meta_extra=meta_extra)
+    with open(os.path.join(tmp, trace_format.STATE_FILE), "wb") as f:
+        f.write(state_blob)
+    sizes[trace_format.STATE_FILE] = len(state_blob)
+    final = os.path.join(trace_dir, name)
+    if os.path.exists(final):
+        # an orphan not listed in the manifest (e.g. pruned entry whose
+        # directory removal failed); no reader can reference it
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    entry = {"name": name, "epoch": epoch, "n_records": n_records,
+             "cst_entries": len(merge.merged_entries), "files": sizes}
+    manifest["segments"] = segments + [entry]
+    stale_merged = manifest.pop("merged", None)  # no longer covers all epochs
+    trace_format.write_manifest(trace_dir, manifest)
+    if stale_merged is not None:
+        # unlisted above (manifest first, so no reader holds an entry for
+        # it); now reclaim the stale directory instead of leaking it
+        shutil.rmtree(os.path.join(trace_dir, stale_merged["name"]),
+                      ignore_errors=True)
+    return entry
+
+
+def prune_epochs(trace_dir: str, keep: int) -> List[str]:
+    """Retention ring for live monitoring: keep only the newest ``keep``
+    committed segments.  The manifest is rewritten BEFORE directories are
+    deleted, so a reader never sees a listed-but-missing segment; returns
+    the dropped segment names."""
+    if keep <= 0:
+        raise ValueError("keep must be positive")
+    manifest = trace_format.read_manifest(trace_dir)
+    segs = manifest.get("segments", [])
+    if len(segs) <= keep:
+        return []
+    drop, manifest["segments"] = segs[:-keep], segs[-keep:]
+    trace_format.write_manifest(trace_dir, manifest)
+    for e in drop:
+        shutil.rmtree(os.path.join(trace_dir, e["name"]), ignore_errors=True)
+    return [e["name"] for e in drop]
+
+
+# ---------------------------------------------------------------------------
+# the collective flush (called by Recorder.flush on every rank)
+# ---------------------------------------------------------------------------
+
+
+def run_flush(comm, *, entries: List[bytes], cfg: bytes, ticks: np.ndarray,
+              registry: FunctionRegistry, trace_dir: str, epoch: int,
+              cum: CumulativeState, inter_patterns: bool = True,
+              ts_block_records: int = 4096,
+              max_epochs_retained: Optional[int] = None,
+              meta_extra: Optional[Dict[str, Any]] = None
+              ) -> Optional[Dict[str, Any]]:
+    """One epoch flush over ``comm``.  Every rank contributes its delta
+    (local CST entries, serialized CFG, raw ticks); rank 0 folds the
+    reduced delta into ``cum``, commits the segment and returns its
+    manifest entry (other ranks return None).  Collective: all ranks must
+    call it in the same order."""
+    leaf = make_rank_state(comm.rank, entries, cfg, registry)
+    blob = comm.reduce_tree(serialize_rank_state(leaf),
+                            merge_serialized_states)
+    blocks = compress_timestamps_blocked(ticks, ts_block_records) \
+        if len(ticks) else []
+    packed = comm.gather_tree(pack_ts_blocks(blocks))
+    if comm.rank != 0:
+        comm.barrier()
+        return None
+    delta = deserialize_rank_state(blob)
+    # records per unique stream from grammar expansion weights (O(|grammar|)
+    # each), summed over ranks by stream multiplicity
+    per_stream = [sum(terminal_counts(parse_grammar(cfg_e)).values())
+                  for cfg_e, _rows in delta.streams]
+    n_records = sum(per_stream[si] for si in delta.stream_of)
+    merge, cfgs = materialize_state(delta, inter_patterns=inter_patterns)
+    entry = write_epoch_segment(
+        trace_dir, epoch, registry=registry, merge=merge, cfgs=cfgs,
+        rank_ts_blocks=[unpack_ts_blocks(p) for p in packed],
+        state_blob=blob, n_records=n_records, meta_extra=meta_extra)
+    # fold into the cumulative state only after the segment committed, so a
+    # failed write never desyncs the in-memory state from the directory
+    # (the epoch's records are lost either way -- they were snapshotted out
+    # of the live recorder -- but every later flush and the final merged
+    # trace stay consistent with what is actually on disk).  Under ring
+    # retention the cumulative state is never consumed (a merged trace
+    # cannot cover pruned epochs), so skip the fold entirely: rank-0 memory
+    # stays bounded by the ring, matching the live-monitoring use case.
+    if max_epochs_retained is None:
+        cum.append(delta)
+    else:
+        prune_epochs(trace_dir, max_epochs_retained)
+    comm.barrier()
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# merged trace at clean exit (the incremental-finalize payoff)
+# ---------------------------------------------------------------------------
+
+
+def write_merged_trace(trace_dir: str, cum: CumulativeState, *,
+                       registry: FunctionRegistry, inter_patterns: bool = True,
+                       meta_extra: Optional[Dict[str, Any]] = None
+                       ) -> Optional[Dict[str, Any]]:
+    """Materialize the cumulative state into ``<trace_dir>/merged`` -- a
+    plain five-file trace covering every epoch, produced WITHOUT
+    re-reducing the history (the merge already happened incrementally,
+    O(delta) per flush).  Timestamps are reassembled from the committed
+    segments' already-compressed blocks (byte concatenation, no
+    recompression).  Returns the manifest entry, or None when the segment
+    history is incomplete (retention pruned or corrupted epochs): a merged
+    trace must cover exactly the epochs the state covers."""
+    def skip(reason: str) -> None:
+        warnings.warn(
+            f"no merged trace written for {trace_dir!r}: {reason} -- the "
+            f"committed epoch segments remain readable via "
+            f"TraceReader(mode='stitched')", RuntimeWarning)
+
+    manifest = trace_format.read_manifest(trace_dir)
+    entries = manifest.get("segments", [])
+    if len(entries) != cum.n_epochs:
+        skip(f"the directory holds {len(entries)} segments but this run's "
+             f"cumulative state covers {cum.n_epochs} epochs (restarted "
+             f"run, pruning, or a failed flush)")
+        return None
+    nranks = cum.n
+    rank_blocks: List[List[TsBlock]] = [[] for _ in range(nranks)]
+    for entry in entries:
+        # only each segment's timestamp payload is needed here -- the
+        # CST/CFG already live merged inside `cum` -- so skip the full
+        # blob decode a read_stream_trace would pay
+        reason = trace_format.validate_segment(trace_dir, entry)
+        if reason is not None:
+            skip(reason)
+            return None
+        raw, index = trace_format.read_trace_timestamps(
+            os.path.join(trace_dir, entry["name"]))
+        if index is None:  # legacy single-blob segment: not block-indexed
+            skip(f"{entry['name']} has no block-indexed timestamps")
+            return None
+        for r in range(min(nranks, len(index))):
+            rank_blocks[r].extend(
+                (raw[off : off + ln], n, t_min, t_max)
+                for off, ln, n, t_min, t_max in index[r])
+    state = cum.to_rank_state()
+    merge, cfgs = materialize_state(state, inter_patterns=inter_patterns)
+    tmp = os.path.join(trace_dir, MERGED_DIR + ".tmp")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    sizes = trace_format.write_trace(
+        tmp, registry=registry, merged_cst=merge.merged_entries,
+        unique_cfgs=cfgs.unique_cfgs, cfg_index=cfgs.cfg_index,
+        rank_ts_blocks=rank_blocks, meta_extra=meta_extra)
+    state_blob = serialize_rank_state(state)
+    with open(os.path.join(tmp, trace_format.STATE_FILE), "wb") as f:
+        f.write(state_blob)
+    sizes[trace_format.STATE_FILE] = len(state_blob)
+    final = os.path.join(trace_dir, MERGED_DIR)
+    manifest = trace_format.read_manifest(trace_dir)
+    if os.path.exists(final):
+        # a stale merged trace from a previous run using this directory:
+        # unlist it first (atomic manifest write), so no reader ever holds
+        # an entry for a directory mid-replacement
+        if manifest.pop("merged", None) is not None:
+            trace_format.write_manifest(trace_dir, manifest)
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    entry = {"name": MERGED_DIR, "n_epochs": cum.n_epochs, "files": sizes}
+    manifest["merged"] = entry
+    trace_format.write_manifest(trace_dir, manifest)
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# read side: stitch committed segments into one logical trace
+# ---------------------------------------------------------------------------
+
+
+class StitchedTimestampStore:
+    """Per-rank timestamp access across epoch segments: delegates to each
+    segment's store (block-indexed or legacy) in epoch order and
+    concatenates the rows.  ``blocks_touched`` sums the children, so the
+    only-touched-blocks property of windowed queries is observable across
+    the whole stitched trace."""
+
+    def __init__(self, stores: Sequence[Any]):
+        self._stores = list(stores)
+
+    @property
+    def blocks_touched(self) -> int:
+        return sum(s.blocks_touched for s in self._stores)
+
+    def n_blocks(self, rank: int) -> int:
+        return sum(s.n_blocks(rank) for s in self._stores)
+
+    def _concat(self, parts: List[Optional[np.ndarray]]
+                ) -> Optional[np.ndarray]:
+        parts = [p for p in parts if p is not None]
+        if not parts:
+            return None
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+
+    def load(self, rank: int) -> Optional[np.ndarray]:
+        return self._concat([s.load(rank) for s in self._stores])
+
+    def window(self, rank: int, t0: int, t1: int) -> Optional[np.ndarray]:
+        return self._concat([s.window(rank, t0, t1) for s in self._stores])
+
+
+def make_ts_store(data: Dict[str, Any]):
+    """The timestamp store for one ``read_trace_files`` payload: block-
+    indexed when the segment carries ``ts_index``, legacy single-blob
+    otherwise (same interface either way)."""
+    if data.get("ts_index") is not None:
+        return BlockedTimestampStore(data["ts_raw"], data["ts_index"])
+    return TimestampStore(data["rank_timestamps"])
+
+
+def stitch_segments(datas: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Concatenate committed segments (``read_trace_files`` payloads, epoch
+    order) into one logical trace, value-identical to a one-shot finalize
+    of the same calls.
+
+    The stitched merged CST is the concatenation of the segments' CSTs
+    (epoch ``e``'s terminals shifted past the earlier rows); each rank's
+    stitched CFG splices its per-epoch grammars with
+    :func:`sequitur.concat_grammars` -- ranks sharing the same per-epoch
+    CFG sequence share one stitched CFG, so SPMD dedup survives stitching.
+    The function table is taken from the NEWEST segment (the registry only
+    grows during a run, so it is the superset).
+    """
+    if not datas:
+        raise trace_format.TraceFormatError("no segments to stitch")
+    nranks_set = {d["meta"]["nranks"] for d in datas}
+    if len(nranks_set) != 1:
+        raise trace_format.TraceFormatError(
+            f"segments disagree on nranks: {sorted(nranks_set)}")
+    nranks = nranks_set.pop()
+    merged_cst: List[bytes] = []
+    toffs: List[int] = []
+    for d in datas:
+        toffs.append(len(merged_cst))
+        merged_cst.extend(d["merged_cst"])
+    combo_table: Dict[tuple, int] = {}
+    unique_cfgs: List[bytes] = []
+    cfg_index: List[int] = []
+    for r in range(nranks):
+        combo = tuple(d["cfg_index"][r] for d in datas)
+        i = combo_table.get(combo)
+        if i is None:
+            i = len(unique_cfgs)
+            combo_table[combo] = i
+            unique_cfgs.append(concat_grammars(
+                [(datas[s]["unique_cfgs"][u], toffs[s])
+                 for s, u in enumerate(combo)]))
+        cfg_index.append(i)
+    meta = dict(datas[-1]["meta"])
+    meta["nranks"] = nranks
+    return {
+        "meta": meta,
+        "merged_cst": merged_cst,
+        "unique_cfgs": unique_cfgs,
+        "cfg_index": cfg_index,
+        "ts_store": StitchedTimestampStore([make_ts_store(d) for d in datas]),
+        "n_segments": len(datas),
+    }

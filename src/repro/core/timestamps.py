@@ -11,14 +11,32 @@ recorded in metadata).  The compression pipeline is
 The delta+zigzag stage is the arithmetic hot loop; ``repro.kernels.
 delta_encode`` provides the TPU (Pallas) version of it, validated against
 the numpy path used here.
+
+**Block-indexed storage** (streaming traces): instead of one zlib blob per
+rank, :func:`compress_timestamps_blocked` splits the (n, 2) tick array into
+fixed-record blocks, each independently delta+zigzag+zlib encoded and
+carrying ``(n_records, t_min, t_max)`` index metadata.  Time-windowed
+queries then decompress only the blocks whose ``[t_min, t_max]`` span
+intersects the window (:class:`BlockedTimestampStore.window`); the
+single-blob layout stays readable through :class:`TimestampStore`, which
+presents the same interface with one "block" per rank.  Both stores count
+``blocks_touched`` so callers (benchmarks, tests) can assert that windowed
+queries really skip untouched blocks.
 """
 
 from __future__ import annotations
 
 import zlib
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from .encoding import read_uvarint, write_uvarint
+
+# records per zlib block in blocked storage (a block holds whole records --
+# an (entry, exit) pair never straddles blocks, so per-block [t_min, t_max]
+# bounds are exact for call-interval intersection tests)
+DEFAULT_BLOCK_RECORDS = 4096
 
 
 class TimestampBuffer:
@@ -44,6 +62,14 @@ class TimestampBuffer:
     def as_array(self) -> np.ndarray:
         parts = self._chunks + [self._cur[: self._n]]
         return np.concatenate(parts, axis=0) if parts else np.empty((0, 2), np.uint32)
+
+    def take(self) -> np.ndarray:
+        """Snapshot the buffered ticks and reset the buffer (epoch flush)."""
+        arr = self.as_array()
+        self._chunks = []
+        self._cur = np.empty((4096, 2), dtype=np.uint32)
+        self._n = 0
+        return arr
 
 
 def delta_zigzag_encode(ticks: np.ndarray) -> np.ndarray:
@@ -83,3 +109,141 @@ def decompress_timestamps(buf: bytes) -> np.ndarray:
     raw = zlib.decompress(buf)
     zz = np.frombuffer(raw, dtype="<u4").astype(np.uint32)
     return delta_zigzag_decode(zz)
+
+
+# ---------------------------------------------------------------------------
+# block-indexed storage (streaming traces / time-windowed queries)
+# ---------------------------------------------------------------------------
+
+# one block: (zlib blob, n_records, t_min, t_max); t_min is the earliest
+# entry tick, t_max the latest effective exit tick (a zero exit tick falls
+# back to the entry tick, mirroring the seed `or` in the analyses)
+TsBlock = Tuple[bytes, int, int, int]
+
+
+def effective_exit(ticks: np.ndarray) -> np.ndarray:
+    ent = ticks[:, 0].astype(np.int64)
+    ext = ticks[:, 1].astype(np.int64)
+    return np.where(ext != 0, ext, ent)
+
+
+def compress_timestamps_blocked(ticks: np.ndarray,
+                                block_records: int = DEFAULT_BLOCK_RECORDS
+                                ) -> List[TsBlock]:
+    """Split ``ticks`` into independently-decodable zlib blocks.
+
+    Each block is delta+zigzag encoded from scratch (its first value is
+    absolute), so any block decompresses without touching its neighbours.
+    """
+    if block_records <= 0:
+        raise ValueError("block_records must be positive")
+    blocks: List[TsBlock] = []
+    for s in range(0, len(ticks), block_records):
+        blk = ticks[s : s + block_records]
+        t_min = int(blk[:, 0].astype(np.int64).min())
+        t_max = int(effective_exit(blk).max())
+        blocks.append((compress_timestamps(blk), len(blk), t_min, t_max))
+    return blocks
+
+
+def pack_ts_blocks(blocks: Sequence[TsBlock]) -> bytes:
+    """Stable byte envelope of one rank's block list (tree-hop transport)."""
+    out = bytearray()
+    write_uvarint(out, len(blocks))
+    for blob, n, t_min, t_max in blocks:
+        write_uvarint(out, len(blob))
+        out.extend(blob)
+        write_uvarint(out, n)
+        write_uvarint(out, t_min)
+        write_uvarint(out, t_max)
+    return bytes(out)
+
+
+def unpack_ts_blocks(buf: bytes) -> List[TsBlock]:
+    pos = 0
+    n_blocks, pos = read_uvarint(buf, pos)
+    blocks: List[TsBlock] = []
+    for _ in range(n_blocks):
+        ln, pos = read_uvarint(buf, pos)
+        blob = bytes(buf[pos : pos + ln])
+        pos += ln
+        n, pos = read_uvarint(buf, pos)
+        t_min, pos = read_uvarint(buf, pos)
+        t_max, pos = read_uvarint(buf, pos)
+        blocks.append((blob, n, t_min, t_max))
+    return blocks
+
+
+def window_rows(ticks: np.ndarray, t0: int, t1: int) -> np.ndarray:
+    """Rows whose call interval [entry, effective exit] intersects the
+    half-open window [t0, t1) -- the shared filter of every windowed query."""
+    ent = ticks[:, 0].astype(np.int64)
+    return ticks[(ent < t1) & (effective_exit(ticks) >= t0)]
+
+
+class TimestampStore:
+    """Per-rank timestamp access over the single-blob (legacy) layout.
+
+    One zlib blob per rank == one block per rank: ``window`` still has to
+    decompress the whole rank, but the interface (and the
+    ``blocks_touched`` counter) is shared with the blocked store so readers
+    and views are layout-agnostic.
+    """
+
+    def __init__(self, rank_blobs: Sequence[bytes]):
+        self._blobs = rank_blobs
+        self.blocks_touched = 0
+
+    def n_blocks(self, rank: int) -> int:
+        return 1 if (rank < len(self._blobs) and self._blobs[rank]) else 0
+
+    def load(self, rank: int) -> Optional[np.ndarray]:
+        """Full (n, 2) tick array of one rank, or None when absent."""
+        blob = self._blobs[rank] if rank < len(self._blobs) else None
+        if not blob:
+            return None
+        self.blocks_touched += 1
+        return decompress_timestamps(blob)
+
+    def window(self, rank: int, t0: int, t1: int) -> Optional[np.ndarray]:
+        """Rows of calls overlapping [t0, t1); decompresses only the blocks
+        whose [t_min, t_max] span intersects the window."""
+        ts = self.load(rank)
+        return None if ts is None else window_rows(ts, t0, t1)
+
+
+class BlockedTimestampStore(TimestampStore):
+    """Block-indexed store: ``index[rank]`` lists ``[offset, length,
+    n_records, t_min, t_max]`` entries into the raw ``timestamps.bin``
+    bytes; windowed queries decompress only intersecting blocks."""
+
+    def __init__(self, raw: bytes, index: Sequence[Sequence[Sequence[int]]]):
+        self._raw = raw
+        self._index = index
+        self.blocks_touched = 0
+
+    def n_blocks(self, rank: int) -> int:
+        return len(self._index[rank]) if rank < len(self._index) else 0
+
+    def _decompress(self, entries) -> Optional[np.ndarray]:
+        if not entries:
+            return None
+        parts = []
+        for off, ln, _n, _t_min, _t_max in entries:
+            self.blocks_touched += 1
+            parts.append(decompress_timestamps(self._raw[off : off + ln]))
+        return np.concatenate(parts, axis=0)
+
+    def load(self, rank: int) -> Optional[np.ndarray]:
+        if rank >= len(self._index):
+            return None
+        return self._decompress(self._index[rank])
+
+    def window(self, rank: int, t0: int, t1: int) -> Optional[np.ndarray]:
+        if rank >= len(self._index):
+            return None
+        entries = [e for e in self._index[rank] if e[3] < t1 and e[4] >= t0]
+        if not entries:
+            # rank has blocks but none intersect: an empty row set, not None
+            return (np.empty((0, 2), np.uint32) if self._index[rank] else None)
+        return window_rows(self._decompress(entries), t0, t1)

@@ -50,7 +50,7 @@ from .patterns import IntraPatternDecoder
 from .reader import Record, _resolve_rank
 from .sequitur import (expand_grammar, expand_grammar_reversed,
                        terminal_counts, terminal_positions)
-from .timestamps import decompress_timestamps
+from .timestamps import effective_exit
 
 _DATA_FUNCS = frozenset({"pwrite", "write", "pread", "read", "shard_write_at",
                          "shard_read_at"})
@@ -255,10 +255,14 @@ class TraceView:
 
     # -- lazy, memoized per-rank timestamps -----------------------------------
 
+    @property
+    def ts_store(self):
+        """The reader's per-rank timestamp store (single-blob, block-indexed
+        or stitched multi-segment; shared ``blocks_touched`` counter)."""
+        return self.reader.ts_store
+
     def _decompress_ts(self, rank: int) -> Optional[np.ndarray]:
-        rank_ts = self.reader.rank_ts
-        blob = rank_ts[rank] if rank < len(rank_ts) else None
-        return decompress_timestamps(blob) if blob else None
+        return self.reader.ts_store.load(rank)
 
     def timestamps(self, rank: int) -> Optional[np.ndarray]:
         """(n, 2) entry/exit tick array of one rank, or None when the trace
@@ -448,14 +452,10 @@ class TraceView:
                 chains["->".join(stack)] += 1
         return dict(chains)
 
-    def overlap_ratio(self, rank: int = 0) -> float:
-        """Fraction of busy I/O time with >= 2 threads inside calls:
-        vectorized event sweep over the rank's lazy timestamp array."""
-        ts = self.timestamps(rank)
-        if ts is None or not len(ts):
-            return 0.0
-        n = len(ts)
-        t = np.concatenate([ts[:, 0], ts[:, 1]]).astype(np.int64)
+    @staticmethod
+    def _overlap_sweep(ent: np.ndarray, ext: np.ndarray) -> float:
+        t = np.concatenate([ent, ext]).astype(np.int64)
+        n = len(ent)
         d = np.concatenate([np.ones(n, np.int64), -np.ones(n, np.int64)])
         # tuple-sort order of the seed: by time, exits (-1) before entries
         order = np.lexsort((d, t))
@@ -465,6 +465,67 @@ class TraceView:
         busy = int(dt[c >= 1].sum())
         overlap = int(dt[c >= 2].sum())
         return overlap / busy if busy else 0.0
+
+    def overlap_ratio(self, rank: int = 0, t0: Optional[int] = None,
+                      t1: Optional[int] = None) -> float:
+        """Fraction of busy I/O time with >= 2 threads inside calls:
+        vectorized event sweep over the rank's timestamps.
+
+        With a ``[t0, t1)`` window, only the timestamp blocks whose
+        ``[t_min, t_max]`` span intersects the window are decompressed
+        (block-indexed streaming traces; observable through
+        ``ts_store.blocks_touched``) and call intervals are clipped to the
+        window, effective exits (zero exit -> entry) applied.
+
+        Windows are in raw uint32 microsecond ticks, which wrap at ~71.6
+        minutes (the trace format's documented tick policy): windowed
+        queries are exact within one wrap period; multi-hour absolute
+        windows need the 64-bit tick extension (ROADMAP open item)."""
+        if t0 is None and t1 is None:
+            ts = self.timestamps(rank)
+            if ts is None or not len(ts):
+                return 0.0
+            return self._overlap_sweep(ts[:, 0], ts[:, 1])
+        lo = 0 if t0 is None else int(t0)
+        hi = (1 << 62) if t1 is None else int(t1)
+        ts = self.ts_store.window(rank, lo, hi)
+        if ts is None or not len(ts):
+            return 0.0
+        ent = np.clip(ts[:, 0].astype(np.int64), lo, hi)
+        return self._overlap_sweep(ent, np.clip(effective_exit(ts), lo, hi))
+
+    def bandwidth_bounds(self, t0: int, t1: int) -> Dict[str, Any]:
+        """Compressed-domain aggregate-bandwidth BOUNDS over ``[t0, t1)``.
+
+        Call counts come from the block-indexed timestamp stores (only
+        blocks intersecting the window are decompressed); byte bounds come
+        from the CST size columns (O(|CST|), no expansion): every windowed
+        call transfers at most the trace's largest data-call size, and at
+        least 0 when the trace mixes in metadata calls (else the smallest
+        data size).  Exact windowed attribution would need the expanded
+        row<->size alignment; these bounds answer monitoring questions
+        ("could this window have saturated the target?") from touched
+        blocks only.
+        """
+        if not t1 > t0:
+            raise ValueError("window must satisfy t1 > t0")
+        n_calls = 0
+        for r in range(self.nranks):
+            w = self.ts_store.window(r, t0, t1)
+            if w is not None:
+                n_calls += len(w)
+        data_sizes = [s.size for s in self._sigs if s.is_data]
+        any_non_data = any(not s.is_data for s in self._sigs)
+        hi_bytes = n_calls * (max(data_sizes) if data_sizes else 0)
+        lo_bytes = 0 if (any_non_data or not data_sizes) \
+            else n_calls * min(data_sizes)
+        window_us = t1 - t0
+        return {
+            "n_calls": n_calls,
+            "window_us": window_us,
+            "lo_MBps": lo_bytes / window_us,   # bytes/us == MB/s
+            "hi_MBps": hi_bytes / window_us,
+        }
 
     def _span_cols(self, u: int, targets: tuple):
         """Rank-symbolic write extents of CFG ``u``, grouped by handle id in

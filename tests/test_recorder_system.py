@@ -126,6 +126,28 @@ def test_handle_reuse_constant_signatures(dirs):
     assert len(rec.cst) <= 8
 
 
+def test_mkdir_posix_semantics(dirs):
+    """posix.mkdir must behave like os.mkdir: re-creating an existing
+    directory fails with EEXIST (recorded as an err return) instead of the
+    old silent exist_ok success; posix.makedirs keeps the idempotent
+    recursive behaviour for the checkpoint engine."""
+    tracedir, datadir = dirs
+    target = os.path.join(datadir, "sub")
+    nested = os.path.join(datadir, "a", "b", "c")
+    with session(RecorderConfig(trace_dir=tracedir)):
+        posix.mkdir(target, 0o755)
+        with pytest.raises(FileExistsError):
+            posix.mkdir(target, 0o755)
+        posix.makedirs(nested, 0o755)
+        posix.makedirs(nested, 0o755)  # idempotent, records two successes
+    assert os.path.isdir(nested)
+    r = TraceReader(tracedir)
+    recs = [(rc.func, rc.ret) for rc in r.iter_records(0)]
+    assert recs[0] == ("mkdir", None)
+    assert recs[1] == ("mkdir", ("err", "FileExistsError"))
+    assert recs[2:] == [("makedirs", None), ("makedirs", None)]
+
+
 def test_error_capture(dirs):
     tracedir, datadir = dirs
     with session(RecorderConfig(trace_dir=tracedir)):

@@ -1,0 +1,562 @@
+"""Streaming trace subsystem: N-epoch flushes value-identical to a one-shot
+finalize, crash recovery over committed segments, incremental cross-epoch
+state accumulation, block-indexed timestamp windows, and flush knobs."""
+
+import json
+import os
+import random
+import shutil
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fallback: seeded-random example generation
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import streaming, trace_format
+from repro.core.comm import Comm, SoloComm, run_thread_world
+from repro.core.interprocess import (append_epoch_state, make_rank_state,
+                                     serialize_rank_state,
+                                     tree_reduce_states)
+from repro.core.reader import TraceReader
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+from repro.core.timestamps import (BlockedTimestampStore,
+                                   compress_timestamps_blocked,
+                                   pack_ts_blocks, unpack_ts_blocks)
+from repro.core.trace_format import TraceFormatError
+import repro.core.apis  # noqa: F401  (populate registry)
+
+
+# ---------------------------------------------------------------------------
+# deterministic randomized workloads (explicit ticks, so records -- including
+# timestamps -- are reproducible across separate recorder runs)
+# ---------------------------------------------------------------------------
+
+
+def _gen_calls(rng: random.Random, n_calls: int, rank: int, nranks: int):
+    """A reproducible mixed call list: strided pwrites (rank-linear offsets),
+    irregular pwrites, lseeks with OFFSET returns, opens/closes, stats."""
+    fids = {name: REGISTRY.id_of(name)
+            for name in ("open", "close", "pwrite", "lseek", "write", "stat")}
+    calls = []
+    fd = f"fd-{rank}"
+    calls.append((fids["open"], ("/data/f.bin", 2, 438), fd))
+    stride_base = rank * 4096
+    for i in range(n_calls):
+        kind = rng.random()
+        if kind < 0.5:
+            off = stride_base + i * nranks * 4096
+            calls.append((fids["pwrite"], (fd, b"x" * 4096, off), 4096))
+        elif kind < 0.7:
+            off = rng.randrange(1 << 20)
+            calls.append((fids["pwrite"], (fd, b"y" * 512, off), 512))
+        elif kind < 0.85:
+            off = rank * 256 + i * 256
+            calls.append((fids["lseek"], (fd, off, 0), off))
+        elif kind < 0.95:
+            calls.append((fids["write"], (fd, b"z" * 128), 128))
+        else:
+            calls.append((fids["stat"], ("/data/f.bin",), 4096))
+    calls.append((fids["close"], (fd,), 0))
+    return calls
+
+
+def _feed(rec: Recorder, calls, tick_start: int = 0) -> int:
+    t = tick_start
+    for fid, args, ret in calls:
+        rec.record(fid, args, ret, 0, t, t + 1)
+        t += 2
+    return t
+
+
+def _split(calls, boundaries):
+    """Split a call list at the given record-count boundaries (epochs)."""
+    out, prev = [], 0
+    for b in boundaries:
+        out.append(calls[prev:b])
+        prev = b
+    out.append(calls[prev:])
+    return out
+
+
+def _drive_streaming(trace_dir, rank_calls, boundaries, comm_factory=None,
+                     **cfg_kw):
+    """Run every rank's calls with a flush at each boundary; returns the
+    root stats.  Single-rank uses SoloComm; multi-rank runs a ThreadComm
+    world (flush is a collective)."""
+    nranks = len(rank_calls)
+    if nranks == 1:
+        rec = Recorder(rank=0, config=RecorderConfig(trace_dir=trace_dir,
+                                                     **cfg_kw))
+        parts = _split(rank_calls[0], boundaries)
+        t = 0
+        for i, part in enumerate(parts):
+            t = _feed(rec, part, t)
+            if i < len(parts) - 1:
+                rec.flush()
+        return rec.finalize()
+
+    def worker(comm: Comm, rank: int):
+        rec = Recorder(rank=rank,
+                       config=RecorderConfig(trace_dir=trace_dir, **cfg_kw))
+        parts = _split(rank_calls[rank], boundaries)
+        t = 0
+        for i, part in enumerate(parts):
+            t = _feed(rec, part, t)
+            if i < len(parts) - 1:
+                rec.flush(comm)
+        return rec.finalize(comm)
+
+    return run_thread_world(nranks, worker)[0]
+
+
+def _drive_oneshot(trace_dir, rank_calls, **cfg_kw):
+    nranks = len(rank_calls)
+    if nranks == 1:
+        rec = Recorder(rank=0, config=RecorderConfig(trace_dir=trace_dir,
+                                                     **cfg_kw))
+        _feed(rec, rank_calls[0])
+        return rec.finalize()
+
+    def worker(comm: Comm, rank: int):
+        rec = Recorder(rank=rank,
+                       config=RecorderConfig(trace_dir=trace_dir, **cfg_kw))
+        _feed(rec, rank_calls[rank])
+        return rec.finalize(comm)
+
+    return run_thread_world(nranks, worker)[0]
+
+
+def _assert_value_identical(got: TraceReader, want: TraceReader):
+    """All five analyses + the lossless record stream must match."""
+    gv, wv = got.view(), want.view()
+    assert got.nranks == want.nranks
+    assert list(got.all_records()) == list(want.all_records())
+    assert gv.io_summary() == wv.io_summary()
+    assert gv.size_histogram() == wv.size_histogram()
+    for r in range(want.nranks):
+        assert gv.call_chains(rank=r) == wv.call_chains(rank=r)
+        assert gv.overlap_ratio(r) == wv.overlap_ratio(r)
+    assert gv.consistency_pairs() == wv.consistency_pairs()
+
+
+# ---------------------------------------------------------------------------
+# the core property: N-epoch streaming == one-shot finalize
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=2, max_value=5),
+       st.integers(min_value=8, max_value=60))
+def test_streaming_equals_oneshot(seed, nranks, n_epochs, n_calls):
+    import tempfile
+    rng = random.Random(seed)
+    rank_calls = [_gen_calls(random.Random(seed * 1000 + r), n_calls,
+                             r, nranks) for r in range(nranks)]
+    total = len(rank_calls[0])
+    boundaries = sorted(rng.sample(range(1, total), min(n_epochs - 1,
+                                                        total - 1)))
+    base = tempfile.mkdtemp(prefix="stream_prop_")
+    try:
+        sd, od = os.path.join(base, "stream"), os.path.join(base, "oneshot")
+        _drive_streaming(sd, rank_calls, boundaries)
+        _drive_oneshot(od, rank_calls)
+        want = TraceReader(od)
+        assert trace_format.is_stream_dir(sd)
+        for mode in ("stitched", "merged", "auto"):
+            got = TraceReader(sd, mode=mode)
+            assert got.skipped == []
+            _assert_value_identical(got, want)
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+def test_streaming_matches_oneshot_multirank_explicit(tmp_path):
+    """A fixed 4-rank SPMD case through the real ThreadComm collectives."""
+    nranks, n_calls = 4, 40
+    rank_calls = [_gen_calls(random.Random(7 + r), n_calls, r, nranks)
+                  for r in range(nranks)]
+    sd, od = str(tmp_path / "s"), str(tmp_path / "o")
+    stats = _drive_streaming(sd, rank_calls, [10, 20, 30])
+    assert stats is not None and stats.epochs == 4
+    _drive_oneshot(od, rank_calls)
+    _assert_value_identical(TraceReader(sd, mode="stitched"), TraceReader(od))
+    _assert_value_identical(TraceReader(sd, mode="merged"), TraceReader(od))
+
+
+def test_tail_mode_serves_latest_epoch(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(1), 30, 0, 1)
+    _drive_streaming(sd, [calls], [10, 25])
+    tail = TraceReader(sd, mode="tail")
+    # the final flush (during finalize) covers records 25..end
+    assert tail.view().n_records(0) == len(calls) - 25
+    full = TraceReader(sd, mode="stitched")
+    assert full.view().n_records(0) == len(calls)
+    tail_recs = [rec.func for _, rec in tail.all_records()]
+    full_recs = [rec.func for _, rec in full.all_records()]
+    assert full_recs[25:] == tail_recs
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: committed-but-corrupted and never-committed segments
+# ---------------------------------------------------------------------------
+
+
+def test_truncated_segment_is_skipped_and_reported(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(2), 30, 0, 1)
+    _drive_streaming(sd, [calls], [10, 20])
+    # corrupt the middle committed epoch AFTER commit (truncation)
+    victim = os.path.join(sd, trace_format.segment_name(1), "merged_cst.bin")
+    with open(victim, "r+b") as f:
+        f.truncate(max(os.path.getsize(victim) // 2, 1))
+    reader = TraceReader(sd, mode="stitched")
+    assert len(reader.skipped) == 1
+    assert "epoch_00001" in reader.skipped[0]["segment"]
+    assert "truncated or corrupt" in reader.skipped[0]["reason"]
+    # every intact committed epoch is still served, in order
+    funcs = [rec.func for _, rec in reader.all_records()]
+    want = [REGISTRY.spec(fid).name for fid, _, _ in calls[:10] + calls[20:]]
+    assert funcs == want
+    # auto mode falls back to the (intact) merged trace written at finalize
+    assert TraceReader(sd, mode="auto").view().n_records(0) == len(calls)
+
+
+def test_tail_mode_skips_corrupt_newest_segment(tmp_path):
+    """tail serves the newest INTACT epoch: a truncated newest segment is
+    skipped (and reported) and the previous one served, without ever
+    decoding older epochs."""
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(11), 30, 0, 1)
+    _drive_streaming(sd, [calls], [10, 20])  # epochs 0,1 + tail epoch 2
+    newest = os.path.join(sd, trace_format.segment_name(2), "unique_cfgs.bin")
+    with open(newest, "ab") as f:
+        f.write(b"junk")  # size mismatch vs manifest
+    tail = TraceReader(sd, mode="tail")
+    assert [s["segment"] for s in tail.skipped] == ["epoch_00002"]
+    funcs = [rec.func for _, rec in tail.all_records()]
+    assert funcs == [REGISTRY.spec(fid).name for fid, _, _ in calls[10:20]]
+
+
+def test_missing_segment_directory_is_reported(tmp_path):
+    sd = str(tmp_path / "s")
+    _drive_streaming(sd, [_gen_calls(random.Random(3), 20, 0, 1)], [10])
+    shutil.rmtree(os.path.join(sd, trace_format.segment_name(0)))
+    reader = TraceReader(sd, mode="stitched")
+    assert reader.skipped and "missing" in reader.skipped[0]["reason"]
+
+
+def test_uncommitted_tmp_segment_is_invisible(tmp_path):
+    sd = str(tmp_path / "s")
+    _drive_streaming(sd, [_gen_calls(random.Random(4), 20, 0, 1)], [10])
+    # a crashed mid-write segment: directory exists, never renamed in
+    debris = os.path.join(sd, trace_format.segment_name(7) + ".tmp")
+    os.makedirs(debris)
+    with open(os.path.join(debris, "merged_cst.bin"), "wb") as f:
+        f.write(b"partial")
+    reader = TraceReader(sd, mode="stitched")
+    assert reader.skipped == []
+    assert reader.n_segments == 2  # epoch 0 + the finalize tail
+
+
+def test_all_segments_corrupt_is_a_format_error(tmp_path):
+    sd = str(tmp_path / "s")
+    _drive_streaming(sd, [_gen_calls(random.Random(5), 8, 0, 1)], [4])
+    shutil.rmtree(os.path.join(sd, "merged"))
+    shutil.rmtree(os.path.join(sd, trace_format.segment_name(0)))
+    shutil.rmtree(os.path.join(sd, trace_format.segment_name(1)))
+    with pytest.raises(TraceFormatError, match="no intact epoch segments"):
+        TraceReader(sd, mode="stitched")
+
+
+def test_mixed_format_version_rejected(tmp_path):
+    sd = str(tmp_path / "s")
+    _drive_streaming(sd, [_gen_calls(random.Random(6), 20, 0, 1)], [10])
+    meta_path = os.path.join(sd, trace_format.segment_name(1),
+                             "metadata.json")
+    meta = json.load(open(meta_path))
+    meta["format_version"] = trace_format.FORMAT_VERSION + 1
+    blob = json.dumps(meta)
+    # keep the byte size identical so only the version check can fire
+    blob += " " * (os.path.getsize(meta_path) - len(blob))
+    with open(meta_path, "w") as f:
+        f.write(blob)
+    with pytest.raises(TraceFormatError, match="mixed format_version"):
+        trace_format.read_stream_trace(sd)
+    with pytest.raises(TraceFormatError, match="mixed format_version"):
+        TraceReader(sd, mode="stitched")
+
+
+def test_retention_ring_keeps_newest_epochs(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(8), 40, 0, 1)
+    _drive_streaming(sd, [calls], [10, 20, 30], max_epochs_retained=2)
+    manifest = trace_format.read_manifest(sd)
+    names = [e["name"] for e in manifest["segments"]]
+    assert names == [trace_format.segment_name(2),
+                     trace_format.segment_name(3)]
+    on_disk = sorted(d for d in os.listdir(sd)
+                     if d.startswith(trace_format.SEGMENT_PREFIX))
+    assert on_disk == names
+    # no merged trace under retention (incomplete history), and the
+    # stitched view serves exactly the retained window
+    assert "merged" not in manifest
+    reader = TraceReader(sd)  # auto -> stitched
+    funcs = [rec.func for _, rec in reader.all_records()]
+    assert funcs == [REGISTRY.spec(fid).name for fid, _, _ in calls[20:]]
+
+
+def test_restarted_run_appends_to_existing_trace_dir(tmp_path):
+    """A restarted job reusing a preempted run's trace_dir must append new
+    epochs after the old ones (no name collision, no stale merged trace),
+    and the stitched reader serves both runs' records in order."""
+    sd = str(tmp_path / "s")
+    calls_a = _gen_calls(random.Random(20), 12, 0, 1)
+    _drive_streaming(sd, [calls_a], [6])       # run A: epochs 0,1 + merged
+    assert "merged" in trace_format.read_manifest(sd)
+    calls_b = _gen_calls(random.Random(21), 8, 0, 1)
+    # run B (restart, same dir): its finalize must WARN that no merged
+    # trace can cover the combined history, not silently skip it
+    with pytest.warns(RuntimeWarning, match="no merged trace"):
+        _drive_streaming(sd, [calls_b], [4])
+    manifest = trace_format.read_manifest(sd)
+    epochs = [e["epoch"] for e in manifest["segments"]]
+    assert epochs == sorted(epochs) == [0, 1, 2, 3]
+    # run B's merged covers only run B's epochs, so it must NOT be listed
+    # (a stale or partial merged trace would shadow run A's records), and
+    # run A's stale merged directory must be reclaimed, not leaked
+    assert "merged" not in manifest
+    assert not os.path.exists(os.path.join(sd, "merged"))
+    reader = TraceReader(sd)  # auto -> stitched
+    funcs = [rec.func for _, rec in reader.all_records()]
+    want = [REGISTRY.spec(fid).name for fid, _, _ in calls_a + calls_b]
+    assert funcs == want
+
+
+def test_failed_segment_write_keeps_state_consistent(tmp_path, monkeypatch):
+    """A failed segment commit must surface the error WITHOUT desyncing the
+    cumulative state from the directory: later flushes and the final
+    merged trace cover exactly the committed epochs."""
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(22), 30, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    t = _feed(rec, calls[10:20], t)
+    real = streaming.trace_format.write_trace
+    monkeypatch.setattr(streaming.trace_format, "write_trace",
+                        lambda *a, **k: (_ for _ in ()).throw(OSError("disk full")))
+    with pytest.raises(OSError, match="disk full"):
+        rec.flush()
+    monkeypatch.setattr(streaming.trace_format, "write_trace", real)
+    assert rec._cum.n_epochs == 1  # the failed epoch was never folded in
+    _feed(rec, calls[20:], t)
+    rec.finalize()
+    manifest = trace_format.read_manifest(sd)
+    assert "merged" in manifest  # cum matches the committed segments
+    committed = calls[:10] + calls[20:]  # records 10..20 died with the fault
+    for mode in ("stitched", "merged"):
+        funcs = [r.func for _, r in TraceReader(sd, mode=mode).all_records()]
+        assert funcs == [REGISTRY.spec(fid).name for fid, _, _ in committed]
+
+
+# ---------------------------------------------------------------------------
+# incremental cross-epoch state: O(delta) accumulator == pure reference fold
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=4))
+def test_cumulative_state_matches_reference_fold(seed, nranks, n_epochs):
+    rng = random.Random(seed)
+    cum = streaming.CumulativeState()
+    ref, occ = None, None
+    for _ in range(n_epochs):
+        n_calls = rng.randrange(3, 25)
+        epoch_seed = rng.randrange(1 << 30)
+        states = []
+        for r in range(nranks):
+            rec = Recorder(rank=r, config=RecorderConfig())
+            _feed(rec, _gen_calls(random.Random(epoch_seed + r), n_calls,
+                                  r, nranks))
+            entries, cfg, _ = rec.take_epoch()
+            states.append(make_rank_state(r, entries, cfg, REGISTRY))
+        delta = tree_reduce_states(states)
+        ref, occ = append_epoch_state(ref, occ, delta)
+        cum.append(delta)
+    assert serialize_rank_state(cum.to_rank_state()) == \
+        serialize_rank_state(ref)
+
+
+def test_gather_tree_orders_by_rank():
+    def worker(comm: Comm, rank: int):
+        return comm.gather_tree(f"payload-{rank}")
+
+    results = run_thread_world(5, worker)
+    assert results[0] == [f"payload-{r}" for r in range(5)]
+    assert all(r is None for r in results[1:])
+    assert SoloComm().gather_tree(b"x") == [b"x"]
+
+
+# ---------------------------------------------------------------------------
+# block-indexed timestamps: only intersecting blocks are decompressed
+# ---------------------------------------------------------------------------
+
+
+def test_blocked_store_roundtrip_and_window():
+    ticks = np.arange(1, 2 * 100 + 1, dtype=np.uint32).reshape(100, 2)
+    blocks = compress_timestamps_blocked(ticks, block_records=16)
+    assert [n for _, n, _, _ in blocks] == [16] * 6 + [4]
+    assert unpack_ts_blocks(pack_ts_blocks(blocks)) == blocks
+    raw = bytearray()
+    index = [[]]
+    for blob, n, t_min, t_max in blocks:
+        index[0].append([len(raw), len(blob), n, t_min, t_max])
+        raw.extend(blob)
+    store = BlockedTimestampStore(bytes(raw), index)
+    assert np.array_equal(store.load(0), ticks)
+    assert store.blocks_touched == 7
+    # a window inside block 2 touches exactly one block
+    before = store.blocks_touched
+    w = store.window(0, int(ticks[40, 0]), int(ticks[41, 0]))
+    assert store.blocks_touched - before == 1
+    assert np.array_equal(w, ticks[40:41])  # only row 40 intersects [81, 83)
+    # out-of-range window: zero rows, zero decompression
+    before = store.blocks_touched
+    w = store.window(0, 10 ** 9, 10 ** 9 + 5)
+    assert len(w) == 0 and store.blocks_touched == before
+    assert store.window(1, 0, 10) is None  # no such rank
+
+
+def test_windowed_view_queries_touch_only_intersecting_blocks(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(9), 200, 0, 1)
+    _drive_streaming(sd, [calls], [64, 128], ts_block_records=16)
+    view = TraceReader(sd, mode="stitched").view()
+    store = view.ts_store
+    total = store.n_blocks(0)
+    assert total > 8
+    before = store.blocks_touched
+    bounds = view.bandwidth_bounds(10, 40)
+    touched = store.blocks_touched - before
+    assert 1 <= touched < total
+    assert bounds["n_calls"] > 0
+    assert bounds["hi_MBps"] >= bounds["lo_MBps"] >= 0.0
+    before = store.blocks_touched
+    view.overlap_ratio(0, 10, 40)
+    assert 1 <= store.blocks_touched - before < total
+    # the full (unwindowed) analyses still see every record
+    assert view.n_records(0) == len(calls)
+
+
+# ---------------------------------------------------------------------------
+# flush knobs: auto-flush cadence and from_env validation
+# ---------------------------------------------------------------------------
+
+
+def test_autoflush_every_n_records(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(10), 50, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(
+        trace_dir=sd, flush_every_n_records=20))
+    _feed(rec, calls)
+    assert rec.epoch == len(calls) // 20
+    rec.finalize()
+    manifest = trace_format.read_manifest(sd)
+    assert len(manifest["segments"]) == rec.epoch
+    assert sum(e["n_records"] for e in manifest["segments"]) == len(calls)
+    reader = TraceReader(sd, mode="stitched")
+    assert [rec.func for _, rec in reader.all_records()] == \
+        [REGISTRY.spec(fid).name for fid, _, _ in calls]
+
+
+def test_autoflush_interval(tmp_path, monkeypatch):
+    import repro.core.recorder as recorder_mod
+    fake = [0.0]
+    monkeypatch.setattr(recorder_mod.time, "perf_counter",
+                        lambda: fake[0])
+    sd = str(tmp_path / "s")
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd,
+                                                 flush_interval_s=5.0))
+    fid = REGISTRY.id_of("stat")
+    rec.record(fid, ("/a",), 1, 0, 0, 1)
+    assert rec.epoch == 0
+    fake[0] = 6.0
+    rec.record(fid, ("/a",), 1, 0, 2, 3)
+    assert rec.epoch == 1
+
+
+def test_autoflush_failure_never_breaks_app_calls(tmp_path, monkeypatch):
+    """A trace-volume failure during AUTO-flush must not surface inside the
+    application's unrelated I/O call: it warns once, disables auto-flush,
+    and recording continues; explicit flush/finalize still raise."""
+    sd = str(tmp_path / "s")
+    rec = Recorder(rank=0, config=RecorderConfig(
+        trace_dir=sd, flush_every_n_records=5))
+    fid = REGISTRY.id_of("stat")
+    boom = lambda *a, **k: (_ for _ in ()).throw(OSError("disk full"))
+    monkeypatch.setattr(streaming.trace_format, "write_trace", boom)
+    with pytest.warns(RuntimeWarning, match="auto-flush failed"):
+        for i in range(6):  # crosses the cadence -> auto-flush fails inside
+            rec.record(fid, ("/a",), 1, 0, 2 * i, 2 * i + 1)
+    assert rec._autoflush_broken
+    for i in range(10):  # no further flush attempts, no warnings, no raise
+        rec.record(fid, ("/a",), 1, 0, 100 + 2 * i, 101 + 2 * i)
+    with pytest.raises(OSError, match="disk full"):
+        rec.flush()  # the explicit path still surfaces the error
+
+
+def test_flush_requires_trace_dir():
+    rec = Recorder(rank=0, config=RecorderConfig())
+    with pytest.raises(ValueError, match="trace_dir"):
+        rec.flush()
+
+
+def test_from_env_parses_flush_knobs(monkeypatch):
+    monkeypatch.setenv("RECORDER_FLUSH_EVERY_N_RECORDS", "5000")
+    monkeypatch.setenv("RECORDER_FLUSH_INTERVAL_S", "2.5")
+    monkeypatch.setenv("RECORDER_MAX_EPOCHS_RETAINED", "8")
+    monkeypatch.setenv("RECORDER_TS_BLOCK_RECORDS", "1024")
+    cfg = RecorderConfig.from_env()
+    assert cfg.flush_every_n_records == 5000
+    assert cfg.flush_interval_s == 2.5
+    assert cfg.max_epochs_retained == 8
+    assert cfg.ts_block_records == 1024
+
+
+@pytest.mark.parametrize("kw", [
+    {"flush_every_n_records": 0},
+    {"flush_every_n_records": -5},
+    {"flush_interval_s": 0.0},
+    {"flush_interval_s": -1.0},
+    {"max_epochs_retained": 0},
+    {"ts_block_records": 0},
+])
+def test_constructor_rejects_malformed_knobs(kw):
+    """Directly-constructed configs (the README path) enforce the same
+    bounds as from_env: flush_every_n_records=0 would otherwise silently
+    flush on EVERY record."""
+    with pytest.raises(ValueError, match=next(iter(kw))):
+        RecorderConfig(**kw)
+
+
+@pytest.mark.parametrize("var,val", [
+    ("RECORDER_FLUSH_EVERY_N_RECORDS", "soon"),
+    ("RECORDER_FLUSH_EVERY_N_RECORDS", "0"),
+    ("RECORDER_FLUSH_INTERVAL_S", "fast"),
+    ("RECORDER_FLUSH_INTERVAL_S", "-1"),
+    ("RECORDER_MAX_EPOCHS_RETAINED", "-3"),
+    ("RECORDER_TS_BLOCK_RECORDS", "zero"),
+])
+def test_from_env_rejects_malformed_knobs(monkeypatch, var, val):
+    monkeypatch.setenv(var, val)
+    with pytest.raises(ValueError, match=var):
+        RecorderConfig.from_env()
