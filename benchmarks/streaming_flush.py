@@ -25,9 +25,18 @@ The emitted JSON also records a time-windowed read-side probe: a
 ``TraceView`` must decompress ONLY the timestamp blocks intersecting the
 window (``ts_store.blocks_touched``), asserted here as well.
 
+A second sweep measures the FOREGROUND STALL -- the application-visible
+pause of one ``Recorder.flush`` call -- sync (commit inline) vs async
+(``async_flush=True``: snapshot only, commit in the background executor).
+Asserted: the async median stall is below the sync median (the pause a
+tracer adds to the traced application shrank), and async stalls stay flat
+as epochs accumulate (zero stall growth; same min-based robust statistic
+as the flush-cost flatness check).
+
 Writes artifacts/bench/streaming_flush.json:
-  {"config": ..., "rows": [...], "window_probe": {...}}, one row per
-  (nranks, epoch) with flush_s and the flatness verdict per nranks.
+  {"config": ..., "rows": [...], "window_probe": {...},
+   "foreground_stall": {...}}, one row per (nranks, epoch) with flush_s
+  and the flatness verdict per nranks.
 
     PYTHONPATH=src python -m benchmarks.streaming_flush [--smoke]
 """
@@ -86,7 +95,7 @@ def _flush_once(recs: List[Recorder], cum: streaming.CumulativeState,
     leaves = []
     packed = []
     for r, rec in enumerate(recs):
-        entries, cfg, ticks = rec.take_epoch()
+        entries, cfg, ticks, _wraps = rec.take_epoch()
         leaves.append(make_rank_state(r, entries, cfg, REGISTRY))
         packed.append(pack_ts_blocks(
             compress_timestamps_blocked(ticks, TS_BLOCK_RECORDS)
@@ -148,6 +157,49 @@ def sweep(nranks_list, epochs: int, calls_per_epoch: int) -> Dict:
     return {"rows": rows, "flat": flat, "window_probe": window_probe}
 
 
+def foreground_stall(epochs: int, calls_per_epoch: int) -> Dict:
+    """Application-visible pause of one ``Recorder.flush`` call, sync vs
+    async, over a real solo Recorder.  The async run drains AFTER each
+    stall window closes, so both runs commit identical epoch sequences
+    (no coalescing) and only the pause location differs."""
+    stalls: Dict[str, List[float]] = {}
+    tmp = tempfile.mkdtemp(prefix="streaming_stall_")
+    try:
+        for mode in ("sync", "async"):
+            rec = Recorder(config=RecorderConfig(
+                trace_dir=os.path.join(tmp, mode),
+                ts_block_records=TS_BLOCK_RECORDS,
+                async_flush=(mode == "async")))
+            times = []
+            for e in range(epochs):
+                _feed_epoch([rec], e, calls_per_epoch)
+                t0 = time.perf_counter()
+                rec.flush()
+                times.append(time.perf_counter() - t0)
+                if mode == "async":
+                    rec.drain()
+            rec.finalize()
+            stalls[mode] = times
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    def med(xs: List[float]) -> float:
+        return sorted(xs)[len(xs) // 2]
+
+    early = min(stalls["async"][1:4])
+    late = min(stalls["async"][-3:])
+    return {
+        "sync_stall_s": stalls["sync"],
+        "async_stall_s": stalls["async"],
+        "sync_median_s": med(stalls["sync"]),
+        "async_median_s": med(stalls["async"]),
+        "reduced": med(stalls["async"]) < med(stalls["sync"]),
+        "async_early_s": early,
+        "async_late_s": late,
+        "async_flat": late <= FLAT_FACTOR * early + ABS_SLACK_S,
+    }
+
+
 def main(fast: bool = False) -> List[str]:
     os.makedirs(ART, exist_ok=True)
     if fast:
@@ -155,6 +207,7 @@ def main(fast: bool = False) -> List[str]:
     else:
         nranks_list, epochs, calls = (4, 16, 64), 16, 2000
     out = sweep(nranks_list, epochs, calls)
+    out["foreground_stall"] = foreground_stall(epochs, calls)
     out["config"] = {"fast": fast, "epochs": epochs,
                      "calls_per_epoch": calls, "flat_factor": FLAT_FACTOR,
                      "abs_slack_s": ABS_SLACK_S,
@@ -177,6 +230,19 @@ def main(fast: bool = False) -> List[str]:
         f"{wp['only_touched_intersecting']}")
     assert wp["only_touched_intersecting"], (
         "time-windowed query decompressed every timestamp block")
+    st = out["foreground_stall"]
+    lines.append(
+        f"streaming_flush,stall_sync_med_s={st['sync_median_s']:.5f},"
+        f"stall_async_med_s={st['async_median_s']:.5f},"
+        f"reduced={st['reduced']},async_flat={st['async_flat']}")
+    assert st["reduced"], (
+        f"async flush did not reduce the foreground stall "
+        f"(sync median {st['sync_median_s']:.5f}s, async median "
+        f"{st['async_median_s']:.5f}s)")
+    assert st["async_flat"], (
+        f"async foreground stall grew across epochs "
+        f"(early {st['async_early_s']:.5f}s -> late {st['async_late_s']:.5f}s)"
+        f" -- the snapshot path stopped being O(delta)")
     return lines
 
 

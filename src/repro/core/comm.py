@@ -19,20 +19,32 @@ Implementations:
   SoloComm    single process (the common real-runtime case per host group
               of size 1, and the degenerate default).
   ThreadComm  N real threads with barrier semantics -- used in tests to
-              exercise the SPMD finalize path concurrently.  Implements the
-              true log-round ``reduce_tree`` schedule described above.
-  JaxComm     documented adapter for real multi-host runs: gathers byte
-              buffers with ``jax.experimental.multihost_utils`` primitives.
-              On this single-host container it is constructible only with
-              process_count == 1 (it asserts), but the call structure is the
-              deployment path.  ``reduce_tree`` on a real pod would ride on
-              point-to-point device transfers (or fall back to the generic
-              gather-based schedule below).
+              exercise the SPMD finalize path concurrently.  Implements
+              true point-to-point ``send``/``recv`` over per-pair
+              mailboxes, so ``reduce_tree`` runs the genuine log-round
+              pairwise schedule (no shared-slot barrier walk).
+  JaxComm     adapter for real multi-host runs.  ``reduce_tree`` rides
+              :func:`reduce_tree_via_exchange`: the same log-round
+              schedule, but each round's payloads move together through
+              one COLLECTIVE byte exchange (``distributed.sharding.
+              PpermuteByteTransport`` -- a shard_map ppermute over a 1-D
+              host mesh), because jax has no independent pairwise sends.
+              On this single-process container the schedule is empty and
+              it degenerates to SoloComm semantics.
 
-The base class provides a generic ``reduce_tree`` built on ``gather``: rank
-0 collects every value and folds adjacent pairs level by level -- the same
-association order as the distributed schedule, so results are identical;
-only the communication pattern differs.
+Point-to-point transports advertise ``has_p2p``; the base ``reduce_tree``
+then runs the distributed schedule directly on ``send``/``recv``.
+Transports without p2p fall back to gather + fold adjacent pairs in
+log-rounds at the root -- the same association order, hence byte-identical
+results; only the communication pattern differs.
+
+``vote_any`` is the cadence collective of the streaming flusher: every
+rank contributes a local boolean and all ranks learn the OR, so non-SPMD
+ranks decide to flush (or to coalesce an epoch while a background commit
+is in flight) in lockstep.  ``dup`` hands out an independent collective
+context (the MPI_Comm_dup analogue): the Recorder's background flusher
+runs its collectives on a dup'd comm so they can never interleave with
+the application's foreground collectives on the primary one.
 
 Simulated large-scale ranks (the 16K-process experiments) do not go through
 a Comm at all: benchmarks call the pure functions in ``interprocess.py``
@@ -42,13 +54,59 @@ collective's pairing exactly).
 
 from __future__ import annotations
 
+import queue
 import threading
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+#: seconds a ThreadComm recv waits before concluding the peer is gone
+_RECV_TIMEOUT_S = 60.0
+
+
+def reduce_rounds(size: int) -> List[List[Tuple[int, int]]]:
+    """The (src, dst) pairs of every round of the log-round tree schedule:
+    in the round of stride ``s``, rank ``r`` with ``r % 2s == s`` ships its
+    accumulated value to ``r - s``.  Shared by the p2p path, the collective
+    exchange path and the ThreadComm tests, so every transport provably
+    runs the same pairing (and therefore the same association order as the
+    gather fallback)."""
+    rounds: List[List[Tuple[int, int]]] = []
+    s = 1
+    while s < size:
+        rounds.append([(r, r - s) for r in range(s, size, 2 * s)])
+        s *= 2
+    return rounds
+
+
+def reduce_tree_via_exchange(rank: int, size: int, obj: Any,
+                             fn: Callable[[Any, Any], Any],
+                             exchange: Callable[[Optional[Any], list], Any],
+                             root: int = 0) -> Optional[Any]:
+    """The log-round schedule on a COLLECTIVE byte mover: every rank calls
+    ``exchange(payload_or_None, perm)`` once per round with the identical
+    perm list (SPMD -- e.g. a jax ppermute), and the call returns the
+    payload addressed to this rank (None for non-receivers).  Senders ship
+    their accumulated value and drop out; receivers fold.  Association
+    order matches :func:`reduce_rounds`, hence byte-identical to every
+    other topology."""
+    assert root == 0, "tree reduction is rooted at rank 0"
+    val = obj
+    for perm in reduce_rounds(size):
+        senders = {src for src, _ in perm}
+        receivers = {dst for _, dst in perm}
+        got = exchange(val if rank in senders else None, perm)
+        if rank in senders:
+            val = None
+        elif rank in receivers:
+            val = fn(val, got)
+    return val if rank == 0 else None
 
 
 class Comm:
     rank: int
     size: int
+    #: transports with independent pairwise send/recv set this True; the
+    #: base reduce_tree then runs the distributed schedule on them
+    has_p2p: bool = False
 
     def gather(self, obj: Any, root: int = 0) -> Optional[List[Any]]:
         raise NotImplementedError
@@ -62,12 +120,44 @@ class Comm:
     def barrier(self) -> None:
         raise NotImplementedError
 
+    def send(self, obj: Any, dest: int) -> None:
+        """Point-to-point send (only on transports with ``has_p2p``)."""
+        raise NotImplementedError
+
+    def recv(self, source: int) -> Any:
+        """Point-to-point receive (only on transports with ``has_p2p``)."""
+        raise NotImplementedError
+
+    def dup(self, key: str = "dup") -> "Comm":
+        """An independent collective context over the same ranks (the
+        MPI_Comm_dup analogue): collectives on the dup never interleave
+        with collectives on the parent, so a background thread (the async
+        epoch flusher) can safely run its own collective sequence.  Every
+        rank must dup with the same ``key``.  The base implementation
+        returns ``self`` -- correct for single-rank comms and for
+        transports whose collectives are already tagged; concurrent
+        multi-rank transports must override."""
+        return self
+
+    def vote_any(self, flag: bool) -> bool:
+        """Collective boolean OR: every rank passes its local flag, every
+        rank returns whether ANY rank's flag was set.  The streaming
+        flusher's cadence collective (one barrier-sized exchange), so
+        non-SPMD ranks flush in lockstep."""
+        votes = self.gather(bool(flag))
+        return bool(self.bcast(any(votes) if votes is not None else None))
+
     def reduce_tree(self, obj: Any, fn: Callable[[Any, Any], Any],
                     root: int = 0) -> Optional[Any]:
         """Pairwise tree reduction; root returns the folded value, other
-        ranks None.  Generic fallback: gather + fold adjacent pairs in
-        log-rounds at the root (same association order as the distributed
-        ThreadComm schedule, hence identical results)."""
+        ranks None.  On p2p transports this runs the true distributed
+        log-round schedule (:func:`reduce_rounds`): a sender ships its
+        accumulated value once and is done; a receiver folds one incoming
+        value per round.  Transports without p2p fall back to gather +
+        fold adjacent pairs in log-rounds at the root (same association
+        order, hence identical results)."""
+        if self.has_p2p and self.size > 1:
+            return self._reduce_tree_p2p(obj, fn, root)
         gathered = self.gather(obj, root=root)
         if gathered is None:
             return None
@@ -77,6 +167,20 @@ class Comm:
                      if i + 1 < len(items) else items[i]
                      for i in range(0, len(items), 2)]
         return items[0]
+
+    def _reduce_tree_p2p(self, obj: Any, fn: Callable[[Any, Any], Any],
+                         root: int = 0) -> Optional[Any]:
+        assert root == 0, "tree reduction is rooted at rank 0"
+        val = obj
+        for perm in reduce_rounds(self.size):
+            for src, dst in perm:
+                if self.rank == src:
+                    self.send(val, dst)
+                    return None  # shipped: this rank is done contributing
+                if self.rank == dst:
+                    val = fn(val, self.recv(src))
+                    break
+        return val if self.rank == 0 else None
 
     def gather_tree(self, obj: Any, root: int = 0) -> Optional[List[Any]]:
         """Gather through the pairwise reduction tree instead of a direct
@@ -112,20 +216,87 @@ class SoloComm(Comm):
 
 
 class _ThreadWorld:
-    def __init__(self, size: int):
+    def __init__(self, size: int,
+                 failed: Optional[threading.Event] = None):
         self.size = size
         self.barrier = threading.Barrier(size)
         self.slots: List[Any] = [None] * size
         self.root_box: List[Any] = [None]
+        # shared with sub-worlds: one rank failing must unblock every
+        # barrier AND every pending point-to-point recv everywhere
+        self.failed = failed if failed is not None else threading.Event()
+        self._mail: Dict[Tuple[int, int], "queue.Queue[Any]"] = {}
+        self._sub: Dict[str, "_ThreadWorld"] = {}
+        self._lock = threading.Lock()
+
+    def mailbox(self, src: int, dst: int) -> "queue.Queue[Any]":
+        with self._lock:
+            q = self._mail.get((src, dst))
+            if q is None:
+                q = self._mail[(src, dst)] = queue.Queue()
+            return q
+
+    def subworld(self, key: str) -> "_ThreadWorld":
+        """The shared sub-world behind ``ThreadComm.dup(key)``: every rank
+        duping with the same key lands on the same world object."""
+        with self._lock:
+            w = self._sub.get(key)
+            if w is None:
+                w = self._sub[key] = _ThreadWorld(self.size,
+                                                 failed=self.failed)
+            return w
+
+    def abort(self) -> None:
+        """Break every barrier (this world and all sub-worlds) and flag
+        pending receives; called when any rank dies."""
+        self.failed.set()
+        try:
+            self.barrier.abort()
+        except Exception:
+            pass
+        with self._lock:
+            subs = list(self._sub.values())
+        for w in subs:
+            w.abort()
 
 
 class ThreadComm(Comm):
     """Barrier-synchronized communicator over threads in one process."""
 
+    has_p2p = True
+
     def __init__(self, world: _ThreadWorld, rank: int):
         self._w = world
         self.rank = rank
         self.size = world.size
+
+    def dup(self, key: str = "dup") -> "ThreadComm":
+        return ThreadComm(self._w.subworld(key), self.rank)
+
+    def send(self, obj: Any, dest: int) -> None:
+        self._w.mailbox(self.rank, dest).put(obj)
+
+    def recv(self, source: int) -> Any:
+        """Blocking per-pair FIFO receive.  Each (src, dst) channel is its
+        own queue, so a fast sender racing ahead into the next collective
+        cannot overtake its earlier message; a failed peer (the world's
+        ``failed`` flag, set by ``run_thread_world``) unblocks the wait
+        with an error instead of deadlocking."""
+        q = self._w.mailbox(source, self.rank)
+        waited = 0.0
+        while True:
+            try:
+                return q.get(timeout=0.05)
+            except queue.Empty:
+                if self._w.failed.is_set():
+                    raise RuntimeError(
+                        f"rank {self.rank}: peer failed while receiving "
+                        f"from rank {source}") from None
+                waited += 0.05
+                if waited >= _RECV_TIMEOUT_S:
+                    raise RuntimeError(
+                        f"rank {self.rank}: timed out receiving from rank "
+                        f"{source} after {_RECV_TIMEOUT_S:.0f}s") from None
 
     def gather(self, obj, root=0):
         self._w.slots[self.rank] = obj
@@ -154,24 +325,14 @@ class ThreadComm(Comm):
     def barrier(self):
         self._w.barrier.wait()
 
-    def reduce_tree(self, obj, fn, root=0):
-        """True distributed log-round schedule: in round of stride s, rank
-        r with r % 2s == s sends to r - s, which folds; every rank walks
-        all rounds so the shared barrier stays aligned."""
-        assert root == 0, "tree reduction is rooted at rank 0"
-        val = obj
-        s = 1
-        while s < self.size:
-            sender = self.rank % (2 * s) == s
-            if sender:
-                self._w.slots[self.rank] = val
-            self._w.barrier.wait()
-            if (not sender and self.rank % (2 * s) == 0
-                    and self.rank + s < self.size):
-                val = fn(val, self._w.slots[self.rank + s])
-            self._w.barrier.wait()
-            s *= 2
-        return val if self.rank == 0 else None
+    def vote_any(self, flag):
+        """Barrier-piggybacked OR: one slot write + two barrier waits
+        (half the cost of gather + bcast), every rank reads the verdict."""
+        self._w.slots[self.rank] = bool(flag)
+        self._w.barrier.wait()
+        out = any(self._w.slots)
+        self._w.barrier.wait()
+        return out
 
 
 def run_thread_world(size: int, fn: Callable[[Comm, int], Any]) -> List[Any]:
@@ -185,10 +346,7 @@ def run_thread_world(size: int, fn: Callable[[Comm, int], Any]) -> List[Any]:
             results[r] = fn(ThreadComm(world, r), r)
         except BaseException as e:  # noqa: BLE001 - surfaced below
             errors[r] = e
-            try:
-                world.barrier.abort()
-            except Exception:
-                pass
+            world.abort()
 
     threads = [threading.Thread(target=worker, args=(r,)) for r in range(size)]
     for t in threads:
@@ -204,31 +362,58 @@ def run_thread_world(size: int, fn: Callable[[Comm, int], Any]) -> List[Any]:
 class JaxComm(Comm):
     """Adapter for real multi-host deployments.
 
-    The gather/bcast of variable-length byte buffers rides on
-    ``jax.experimental.multihost_utils`` primitives.  On a single-process
-    runtime it degenerates to SoloComm semantics, which is what this
-    container exercises.  ``reduce_tree`` inherits the generic gather-based
-    schedule; a real deployment would replace it with point-to-point sends
-    between host pairs (the states are plain byte strings, so any transport
-    works -- see DESIGN notes in the module docstring).
+    ``reduce_tree`` no longer falls back to gather-at-root: it runs the
+    genuine O(log N) pairwise schedule through
+    :func:`reduce_tree_via_exchange`, with each round's byte payloads
+    moved between host pairs by a collective
+    ``distributed.sharding.PpermuteByteTransport`` (length-prefixed uint8
+    device arrays, shard_map ppermute over a 1-D host mesh -- jax's
+    point-to-point primitive is a collective permutation, so every process
+    participates in each round but only the round's pair payloads travel).
+    Rank states are already stable serialized bytes
+    (``interprocess.serialize_rank_state``), so the byte transport carries
+    them unchanged and the result is byte-identical to every other
+    topology (the schedule is :func:`reduce_rounds`).
+
+    On a single-process runtime the schedule is empty and everything
+    degenerates to SoloComm semantics, which is what this container
+    exercises; the transport can be injected for testing.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, transport: Optional[Any] = None) -> None:
         import jax
 
         self.rank = jax.process_index()
         self.size = jax.process_count()
+        self._transport = transport
+
+    def _xport(self):
+        if self._transport is None:
+            from ..distributed.sharding import PpermuteByteTransport
+
+            self._transport = PpermuteByteTransport()
+        return self._transport
+
+    def reduce_tree(self, obj, fn, root=0):
+        if self.size == 1:
+            return obj
+        return reduce_tree_via_exchange(self.rank, self.size, obj, fn,
+                                        self._xport().exchange, root=root)
+
+    def vote_any(self, flag):
+        if self.size == 1:
+            return bool(flag)
+        from ..distributed.sharding import global_any
+
+        return global_any(flag)
 
     def gather(self, obj, root=0):
         if self.size == 1:
             return [obj]
-        from jax.experimental import multihost_utils
-
-        # allgather via host callback of opaque python objects
-        gathered = multihost_utils.process_allgather  # documented path
         raise NotImplementedError(
             "multi-host gather requires a real multi-process jax runtime; "
-            "see DESIGN.md (JaxComm deployment notes)")
+            "reduce_tree/gather_tree cover the finalize collectives via "
+            "the ppermute byte transport")
 
     def bcast(self, obj, root=0):
         if self.size == 1:

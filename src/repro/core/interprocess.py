@@ -670,7 +670,8 @@ def _values_for_rank(g: _Group, state: RankState, rank: int) -> tuple:
 
 
 def materialize_state(state: RankState, inter_patterns: bool = True,
-                      fit_mode: str = "vectorized"
+                      fit_mode: str = "vectorized",
+                      cache_streams: bool = True
                       ) -> Tuple[MergeResult, CfgResult]:
     """Emit the merged CST + deduped CFGs from a fully-reduced state.
 
@@ -679,6 +680,15 @@ def materialize_state(state: RankState, inter_patterns: bool = True,
     like the flat pass 3.  Streams whose groups all materialize to
     rank-independent signatures are interned once and their remap reused,
     which makes this O(unique streams + ranks) for SPMD workloads.
+    Near-uniform streams (a few rank-dependent rows in an otherwise
+    uniform stream) share the uniform rows' remap too: later ranks copy it
+    and re-sign only the irregular rows.  Both reuses preserve the flat
+    pass's intern order exactly -- a uniform row's intern at a later rank
+    is always a table hit, so skipping it cannot shift terminal ids
+    (property-tested cached vs uncached in ``tests/test_interprocess.py``).
+
+    ``cache_streams=False`` disables both reuses (every rank walks every
+    row) -- the reference path the property tests compare against.
 
     ``fit_mode`` is accepted for API symmetry with :func:`finalize_ranks`
     but does not change the work done here: tree fitting happens
@@ -730,29 +740,45 @@ def materialize_state(state: RankState, inter_patterns: bool = True,
         return sig
 
     stream_cache: Dict[int, Tuple[Dict[int, int], bytes]] = {}
+    # near-uniform streams: the first rank's remap plus which rows are
+    # rank-dependent; later ranks copy the remap and re-sign only those
+    partial_cache: Dict[int, Tuple[Dict[int, int], List[int]]] = {}
     remaps: List[Dict[int, int]] = []
     remapped_cfgs: List[bytes] = []
     for j in range(nranks):
         si = state.stream_of[j]
-        cached = stream_cache.get(si)
+        cached = stream_cache.get(si) if cache_streams else None
         if cached is not None:
             remaps.append(cached[0])
             remapped_cfgs.append(cached[1])
             continue
         cfg_bytes, rows = state.streams[si]
-        remap: Dict[int, int] = {}
-        cacheable = True
+        part = partial_cache.get(si) if cache_streams else None
+        if part is not None:
+            base_remap, irr_rows = part
+            remap = dict(base_remap)
+            for old_t in irr_rows:
+                g = state.groups[rows[old_t]]
+                remap[old_t] = intern(_build_sig(
+                    g.parts, _values_for_rank(g, state, state.base + j)))
+            remaps.append(remap)
+            remapped_cfgs.append(remap_grammar(cfg_bytes, remap))
+            continue
+        remap = {}
+        irr_rows = []
         for old_t, gkey in enumerate(rows):
             g = state.groups[gkey]
             sig = uniform_sig(gkey, g)
             if sig is None:
-                cacheable = False
+                irr_rows.append(old_t)
                 sig = _build_sig(g.parts,
                                  _values_for_rank(g, state, state.base + j))
             remap[old_t] = intern(sig)
         remapped = remap_grammar(cfg_bytes, remap)
-        if cacheable:
+        if not irr_rows:
             stream_cache[si] = (remap, remapped)
+        else:
+            partial_cache[si] = (remap, irr_rows)
         remaps.append(remap)
         remapped_cfgs.append(remapped)
 

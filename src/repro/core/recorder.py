@@ -19,6 +19,7 @@ CST, timestamps, metadata).
 
 from __future__ import annotations
 
+import concurrent.futures
 import getpass
 import os
 import socket
@@ -37,7 +38,7 @@ from .interprocess import (deserialize_rank_state, finalize_ranks,
                            merge_serialized_states, serialize_rank_state)
 from .patterns import IntraPatternTracker
 from .sequitur import Sequitur
-from .specs import REGISTRY, FunctionRegistry, Role
+from .specs import DATA_FUNCS, REGISTRY, FunctionRegistry, Role
 from .timestamps import TimestampBuffer, compress_timestamps
 from . import streaming, trace_format
 
@@ -92,6 +93,12 @@ class RecorderConfig:
     max_epochs_retained: Optional[int] = None
     # records per zlib block in the segment timestamp index
     ts_block_records: int = 4096
+    # run epoch commits (reduce + segment write) in a background thread:
+    # flush() snapshots the delta synchronously and returns immediately.
+    # At most one epoch is in flight; a flush arriving while one is in
+    # flight coalesces (its records ride the next epoch).  Errors from the
+    # background commit surface on the next flush()/finalize()/drain().
+    async_flush: bool = False
 
     def __post_init__(self) -> None:
         # the same bounds from_env enforces, so directly-constructed
@@ -146,6 +153,8 @@ class RecorderConfig:
         b = _env_int("RECORDER_TS_BLOCK_RECORDS")
         if b is not None:
             cfg.ts_block_records = b
+        if os.environ.get("RECORDER_ASYNC_FLUSH"):
+            cfg.async_flush = True
         return cfg
 
 
@@ -163,6 +172,11 @@ class RecorderStats:
 class _ThreadState(threading.local):
     def __init__(self) -> None:
         self.depth = 0
+        # this thread's dense index into the trace's thread column.  Kept in
+        # thread-local storage, NOT in a dict keyed by threading.get_ident():
+        # the OS recycles identifiers, so sequential short-lived threads would
+        # collapse into one trace thread under an ident-keyed map.
+        self.tidx: Optional[int] = None
 
 
 class Recorder:
@@ -178,7 +192,7 @@ class Recorder:
         self.timestamps = TimestampBuffer()
         self._lock = threading.Lock()
         self._tls = _ThreadState()
-        self._thread_ids: Dict[int, int] = {}
+        self._next_thread_index = 0
         self._handles: Dict[Any, Handle] = {}
         self._untracked: Set[Any] = set()
         self._next_handle = 0
@@ -198,6 +212,14 @@ class Recorder:
         # summed per-flush byte sizes for the final RecorderStats
         self._cum = streaming.CumulativeState()
         self._stream_totals = RecorderStats()
+        # first (unmasked) tick of the current epoch -> per-epoch wrap base
+        self._epoch_first_tick: Optional[int] = None
+        # -- async flush state (config.async_flush) -----------------------------
+        self._flush_pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._inflight: Optional[concurrent.futures.Future] = None
+        self._async_error: Optional[BaseException] = None
+        self._bg_comm: Optional[Comm] = None
+        self.epochs_coalesced = 0  # flush requests absorbed by an in-flight one
 
     # -- wrapper support ------------------------------------------------------
 
@@ -230,11 +252,14 @@ class Recorder:
         self._next_handle += 1
         return h
 
-    def _thread_index(self, tid: int) -> int:
-        idx = self._thread_ids.get(tid)
+    def _thread_index(self) -> int:
+        """Dense per-thread index, assigned on a thread's first record
+        (callers hold ``self._lock``, serializing the counter)."""
+        idx = self._tls.tidx
         if idx is None:
-            idx = len(self._thread_ids)
-            self._thread_ids[tid] = idx
+            idx = self._next_thread_index
+            self._next_thread_index += 1
+            self._tls.tidx = idx
         return idx
 
     def record(self, func_id: int, raw_args: tuple, ret: Any, depth: int,
@@ -249,7 +274,7 @@ class Recorder:
 
     def _record_locked(self, spec, func_id: int, raw_args: tuple, ret: Any,
                        depth: int, t0: int, t1: int) -> None:
-        tidx = self._thread_index(threading.get_ident())
+        tidx = self._thread_index()
         norm: List[Any] = []
         offsets: List[int] = []
         offset_slots: List[int] = []
@@ -333,8 +358,24 @@ class Recorder:
         terminal = self.cst.intern(sig)
         self.grammar.push(terminal)
         if self.config.timestamps:
-            self.timestamps.append(t0, t1)
+            if self._epoch_first_tick is None:
+                self._epoch_first_tick = t0
+            self.timestamps.append(t0, t1,
+                                   self._data_bytes(spec, norm, nret))
         self.n_records += 1
+
+    @staticmethod
+    def _data_bytes(spec, norm: List[Any], nret: Any) -> int:
+        """Data bytes moved by this call, for the per-timestamp-block byte
+        counters (exact windowed bandwidth).  Mirrors the signature-side
+        rule in ``traceview._SigInfo``: first BUF/SIZE int arg, else int
+        return, else 0 -- and only for the data-moving functions."""
+        if spec.name not in DATA_FUNCS:
+            return 0
+        for a, v in zip(spec.args, norm):
+            if a.role in (Role.BUF, Role.SIZE) and isinstance(v, int):
+                return v
+        return nret if isinstance(nret, int) else 0
 
     def forget_handle(self, raw: Any) -> None:
         """Called by close-style wrappers after recording."""
@@ -351,22 +392,28 @@ class Recorder:
                 or self.config.flush_every_n_records is not None
                 or self.config.flush_interval_s is not None)
 
-    def take_epoch(self) -> Tuple[List[bytes], bytes, Any]:
+    def take_epoch(self) -> Tuple[List[bytes], bytes, Any, int]:
         """Snapshot and reset the live per-rank state: returns the epoch's
-        (CST entries, serialized CFG, raw tick array) and restarts the CST,
-        grammar and intra-pattern tracker for the next epoch.  Handle ids
-        and the tick clock persist across epochs, so cross-epoch streams
-        stitch back into the exact one-shot record sequence."""
+        (CST entries, serialized CFG, raw tick array, tick wrap counter)
+        and restarts the CST, grammar and intra-pattern tracker for the
+        next epoch.  Handle ids and the tick clock persist across epochs,
+        so cross-epoch streams stitch back into the exact one-shot record
+        sequence.  The wrap counter is how many times the uint32
+        microsecond clock had wrapped at the epoch's first record --
+        readers seed timestamp unwrapping with it, so days-long streamed
+        runs keep monotonic int64 timestamps."""
         with self._lock:
             entries = self.cst.entries
             cfg = self.grammar.serialize()
             ticks = self.timestamps.take()
+            wraps = (self._epoch_first_tick or 0) >> 32
+            self._epoch_first_tick = None
             self.cst = CST()
             self.grammar = Sequitur()
             self.intra = IntraPatternTracker(
                 enabled=self.config.intra_patterns)
             self._records_at_flush = self.n_records
-        return entries, cfg, ticks
+        return entries, cfg, ticks, wraps
 
     def flush(self, comm: Optional[Comm] = None,
               trace_dir: Optional[str] = None) -> Optional[Dict[str, Any]]:
@@ -379,6 +426,20 @@ class Recorder:
         ``comm.gather_tree``.  Rank 0 folds the delta into the cumulative
         state, writes ``epoch_NNNNN/`` (atomic rename + manifest rewrite)
         and returns the manifest entry; other ranks return None.
+
+        With ``config.async_flush`` the call only snapshots the delta
+        (cheap, no compression or I/O) and hands reduce+commit to a
+        background thread, returning None immediately.  At most one epoch
+        is in flight: a flush arriving while one is still committing
+        coalesces -- its records simply ride the next epoch (counted in
+        ``epochs_coalesced``).  On a multi-rank comm the coalesce decision
+        is taken in lockstep (``comm.vote_any`` of the local busy flags),
+        so ranks never disagree on how many epochs exist; the background
+        collectives run on ``comm.dup('recorder-flush')``, a separate
+        communication context that cannot interleave with foreground
+        collectives on ``comm``.  A failed background commit surfaces as a
+        RuntimeError (with the original failure chained) on the NEXT
+        flush()/drain()/finalize() -- it never vanishes.
         """
         if self._finalized:
             raise RuntimeError("recorder already finalized")
@@ -389,21 +450,57 @@ class Recorder:
         with self._flush_lock:
             if self._finalized:  # re-check: finalize may have won the lock
                 raise RuntimeError("recorder already finalized")
-            return self._flush_locked(comm, trace_dir)
+            return self._flush_impl(comm, trace_dir)
+
+    def _flush_impl(self, comm: Comm, trace_dir: str
+                    ) -> Optional[Dict[str, Any]]:
+        if self.config.async_flush:
+            return self._flush_async_locked(comm, trace_dir)
+        return self._flush_locked(comm, trace_dir)
 
     def _flush_locked(self, comm: Comm, trace_dir: str
                       ) -> Optional[Dict[str, Any]]:
-        entries, cfg, ticks = self.take_epoch()
+        entries, cfg, ticks, wraps = self.take_epoch()
         epoch = self.epoch
         self.epoch += 1
         self._last_flush_t = time.perf_counter()
+        return self._commit_epoch(comm, trace_dir, entries, cfg, ticks,
+                                  wraps, epoch)
+
+    def _flush_async_locked(self, comm: Comm, trace_dir: str) -> None:
+        self._reap()
+        self._raise_async_error()
+        busy = self._inflight is not None
+        if comm.size > 1:
+            # lockstep coalesce: if ANY rank is still committing, every
+            # rank coalesces -- local decisions could desync epoch counts
+            busy = comm.vote_any(busy)
+        if busy:
+            self.epochs_coalesced += 1
+            return None
+        entries, cfg, ticks, wraps = self.take_epoch()
+        epoch = self.epoch
+        self.epoch += 1
+        self._last_flush_t = time.perf_counter()
+        if self._bg_comm is None:
+            self._bg_comm = comm.dup("recorder-flush")
+        self._inflight = self._pool().submit(
+            self._commit_epoch, self._bg_comm, trace_dir, entries, cfg,
+            ticks, wraps, epoch)
+        return None
+
+    def _commit_epoch(self, comm: Comm, trace_dir: str, entries: List[bytes],
+                      cfg: bytes, ticks: Any, wraps: int, epoch: int
+                      ) -> Optional[Dict[str, Any]]:
+        """Reduce + write one already-snapshotted epoch (the part a
+        background flush moves off the application's critical path)."""
         entry = streaming.run_flush(
             comm, entries=entries, cfg=cfg, ticks=ticks,
             registry=self.registry, trace_dir=trace_dir, epoch=epoch,
             cum=self._cum, inter_patterns=self.config.inter_patterns,
             ts_block_records=self.config.ts_block_records,
             max_epochs_retained=self.config.max_epochs_retained,
-            meta_extra=self._metadata(comm.size))
+            meta_extra={**self._metadata(comm.size), "tick_wraps": wraps})
         if entry is not None:
             t = self._stream_totals
             t.epochs += 1
@@ -412,6 +509,66 @@ class Recorder:
             t.cst_bytes += entry["files"]["merged_cst.bin"]
             t.ts_bytes += entry["files"]["timestamps.bin"]
         return entry
+
+    # -- async flush plumbing -------------------------------------------------
+
+    def _pool(self) -> concurrent.futures.ThreadPoolExecutor:
+        if self._flush_pool is None:
+            self._flush_pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="recorder-flush")
+        return self._flush_pool
+
+    def _reap(self) -> None:
+        """Collect a finished in-flight future; stash its failure (if any)
+        for :meth:`_raise_async_error`.  Callers hold ``_flush_lock``."""
+        fut = self._inflight
+        if fut is not None and fut.done():
+            self._inflight = None
+            exc = fut.exception()
+            if exc is not None:
+                self._async_error = exc
+
+    def _raise_async_error(self) -> None:
+        exc, self._async_error = self._async_error, None
+        if exc is not None:
+            raise RuntimeError(
+                "background epoch commit failed; its epoch's records were "
+                "lost (snapshotted out of the live recorder) but the trace "
+                "directory and cumulative state remain consistent") from exc
+
+    def _drain_locked(self) -> None:
+        fut = self._inflight
+        if fut is not None:
+            concurrent.futures.wait([fut])
+            self._reap()
+        self._raise_async_error()
+
+    def drain(self) -> None:
+        """Block until any in-flight background epoch commit finished;
+        re-raise its error if it failed.  Safe to call with async flushes
+        disabled (no-op)."""
+        with self._flush_lock:
+            self._drain_locked()
+
+    def maybe_flush(self, comm: Optional[Comm] = None,
+                    trace_dir: Optional[str] = None
+                    ) -> Optional[Dict[str, Any]]:
+        """Collective cadence check -- call at a natural synchronization
+        point (e.g. once per training step) on EVERY rank.  Each rank
+        votes whether its own flush cadence (records / wall time) is due;
+        the OR of the votes decides for all, so ranks with skewed record
+        counts (non-SPMD workloads) still flush in lockstep.  Flushes via
+        :meth:`flush` when the vote passes, else returns None after the
+        one cheap vote collective (a barrier-sized piggyback)."""
+        if self._finalized:
+            return None
+        comm = comm or self._comm or SoloComm()
+        due = self._flush_due()
+        if comm.size > 1:
+            due = comm.vote_any(due)
+        if not due:
+            return None
+        return self.flush(comm, trace_dir)
 
     def _flush_due(self) -> bool:
         cfg = self.config
@@ -427,9 +584,11 @@ class Recorder:
         """Auto-flush on the configured record-count / wall-time cadence.
 
         Cadence is evaluated per rank against the recorder's own comm
-        (default Solo): multi-rank jobs should either flush explicitly at
-        collective points or construct the Recorder with a comm whose ranks
-        hit the cadence together (SPMD record counts).
+        (default Solo).  A multi-rank comm never auto-flushes: flush is
+        collective, and a rank-local record count crossing its threshold
+        is not a synchronization point -- multi-rank jobs flush through
+        the :meth:`maybe_flush` vote (or explicit :meth:`flush`) at
+        application sync points.
 
         Concurrent recording threads race the dueness check, so it is
         re-evaluated under the flush lock and a thread that finds a flush
@@ -448,6 +607,11 @@ class Recorder:
                 or (cfg.flush_every_n_records is None
                     and cfg.flush_interval_s is None)):
             return
+        if self._comm is not None and self._comm.size > 1:
+            # a rank-local cadence crossing is not a synchronization point
+            # in a multi-rank job, and flush is collective there; cadence
+            # goes through the maybe_flush vote at app sync points instead
+            return
         if not self._flush_due():
             return
         if not self._flush_lock.acquire(blocking=False):
@@ -456,7 +620,7 @@ class Recorder:
             # re-check under the lock: the flush we raced may have
             # satisfied the cadence, or finalize may have completed
             if not self._finalized and self._flush_due():
-                self._flush_locked(self._comm or SoloComm(), cfg.trace_dir)
+                self._flush_impl(self._comm or SoloComm(), cfg.trace_dir)
         except Exception as e:
             self._autoflush_broken = True
             warnings.warn(
@@ -501,17 +665,25 @@ class Recorder:
         if self._is_streaming():
             if not trace_dir:
                 raise ValueError("streaming finalize requires a trace_dir")
-            # flush the tail; skippable only when provably empty AND the
+            # drain any in-flight background commit FIRST (its failure must
+            # surface here, not vanish), then flush the tail synchronously;
+            # the tail flush is skippable only when provably empty AND the
             # decision needs no agreement (solo comm) -- multi-rank flushes
             # are collective, so every rank must make the same call.  The
             # _finalized flip happens under the flush lock so a racing
             # auto-flush can never commit an epoch after the tail (it
-            # re-checks the flag under the same lock).
+            # re-checks the flag under the same lock).  Safe to wait on the
+            # future while holding the lock: the background commit never
+            # takes it.
             with self._flush_lock:
+                self._drain_locked()
                 if (comm.size > 1 or self.epoch == 0
                         or self.n_records > self._records_at_flush):
                     self._flush_locked(comm, trace_dir)
                 self._finalized = True
+            if self._flush_pool is not None:
+                self._flush_pool.shutdown(wait=True)
+                self._flush_pool = None
             if comm.rank != 0:
                 comm.barrier()
                 return None

@@ -31,6 +31,15 @@ class Role(enum.Enum):
     VAL = "val"
 
 
+#: the data-moving functions -- the calls whose BUF/SIZE argument (or int
+#: return) counts as transferred bytes in bandwidth analyses.  One
+#: definition site shared by the record path (per-timestamp-block byte
+#: counters) and the read side (``traceview``): the two MUST agree or
+#: windowed bandwidth stops being exact.
+DATA_FUNCS = frozenset({"pwrite", "write", "pread", "read",
+                        "shard_write_at", "shard_read_at"})
+
+
 @dataclass
 class Arg:
     name: str

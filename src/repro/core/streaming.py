@@ -319,6 +319,7 @@ def write_merged_trace(trace_dir: str, cum: CumulativeState, *,
         return None
     nranks = cum.n
     rank_blocks: List[List[TsBlock]] = [[] for _ in range(nranks)]
+    base_wraps: Optional[int] = None
     for entry in entries:
         # only each segment's timestamp payload is needed here -- the
         # CST/CFG already live merged inside `cum` -- so skip the full
@@ -327,20 +328,31 @@ def write_merged_trace(trace_dir: str, cum: CumulativeState, *,
         if reason is not None:
             skip(reason)
             return None
-        raw, index = trace_format.read_trace_timestamps(
+        raw, index, seg_meta = trace_format.read_trace_timestamps(
             os.path.join(trace_dir, entry["name"]))
         if index is None:  # legacy single-blob segment: not block-indexed
             skip(f"{entry['name']} has no block-indexed timestamps")
             return None
+        if base_wraps is None:
+            # the merged trace spans every epoch, so its wrap base is the
+            # FIRST epoch's; later epochs' wraps are recovered by the
+            # reader's intra-array drop detection (exact as long as no
+            # inter-epoch gap silently spans >= 2 full wrap periods --
+            # stitched mode, which keeps per-segment bases, has no such
+            # limit)
+            base_wraps = int(seg_meta.get("tick_wraps", 0) or 0)
         for r in range(min(nranks, len(index))):
             rank_blocks[r].extend(
-                (raw[off : off + ln], n, t_min, t_max)
-                for off, ln, n, t_min, t_max in index[r])
+                (raw[e[0] : e[0] + e[1]], e[2], e[3], e[4],
+                 e[5] if len(e) > 5 else None)
+                for e in index[r])
     state = cum.to_rank_state()
     merge, cfgs = materialize_state(state, inter_patterns=inter_patterns)
     tmp = os.path.join(trace_dir, MERGED_DIR + ".tmp")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
+    if base_wraps:
+        meta_extra = {**(meta_extra or {}), "tick_wraps": base_wraps}
     sizes = trace_format.write_trace(
         tmp, registry=registry, merged_cst=merge.merged_entries,
         unique_cfgs=cfgs.unique_cfgs, cfg_index=cfgs.cfg_index,
@@ -397,17 +409,40 @@ class StitchedTimestampStore:
     def load(self, rank: int) -> Optional[np.ndarray]:
         return self._concat([s.load(rank) for s in self._stores])
 
+    def load_unwrapped(self, rank: int) -> Optional[np.ndarray]:
+        """Concatenated int64 unwrapped ticks across segments -- each
+        segment unwraps against its own per-epoch wrap base, so epochs
+        separated by multiple wrap periods still come out monotonic."""
+        return self._concat([s.load_unwrapped(rank) for s in self._stores])
+
     def window(self, rank: int, t0: int, t1: int) -> Optional[np.ndarray]:
         return self._concat([s.window(rank, t0, t1) for s in self._stores])
+
+    def window_stats(self, rank: int, t0: int, t1: int
+                     ) -> Optional[Tuple[int, Optional[int]]]:
+        """Summed ``(n_calls, n_bytes)`` over the segments; ``n_bytes`` is
+        None unless every contributing segment carries byte counters."""
+        parts = [s.window_stats(rank, t0, t1) for s in self._stores]
+        parts = [p for p in parts if p is not None]
+        if not parts:
+            return None
+        n_calls = sum(p[0] for p in parts)
+        exact = all(p[1] is not None for p in parts if p[0])
+        n_bytes = sum(p[1] or 0 for p in parts) if exact else None
+        return n_calls, n_bytes
 
 
 def make_ts_store(data: Dict[str, Any]):
     """The timestamp store for one ``read_trace_files`` payload: block-
     indexed when the segment carries ``ts_index``, legacy single-blob
-    otherwise (same interface either way)."""
+    otherwise (same interface either way).  The segment's per-epoch
+    ``tick_wraps`` counter (how many times the uint32 microsecond clock had
+    already wrapped when the epoch began) seeds the unwrap base."""
+    wraps = int(data["meta"].get("tick_wraps", 0) or 0)
     if data.get("ts_index") is not None:
-        return BlockedTimestampStore(data["ts_raw"], data["ts_index"])
-    return TimestampStore(data["rank_timestamps"])
+        return BlockedTimestampStore(data["ts_raw"], data["ts_index"],
+                                     tick_wraps=wraps)
+    return TimestampStore(data["rank_timestamps"], tick_wraps=wraps)
 
 
 def stitch_segments(datas: List[Dict[str, Any]]) -> Dict[str, Any]:

@@ -91,9 +91,12 @@ def write_trace(trace_dir: str, *, registry: FunctionRegistry,
 
     Timestamps are passed either as ``rank_timestamps`` (legacy: one zlib
     blob per rank, indexed by ``ts_offsets``) or ``rank_ts_blocks``
-    (block-indexed: per rank a list of ``(blob, n_records, t_min, t_max)``
-    blocks from :func:`timestamps.compress_timestamps_blocked`, indexed by
-    ``ts_index`` entries ``[offset, length, n_records, t_min, t_max]``).
+    (block-indexed: per rank a list of
+    ``(blob, n_records, t_min, t_max, n_bytes)`` blocks from
+    :func:`timestamps.compress_timestamps_blocked`, indexed by ``ts_index``
+    entries ``[offset, length, n_records, t_min, t_max]`` plus an optional
+    sixth field -- the block's summed data-byte counter -- when the writer
+    recorded per-call sizes).
     """
     if (rank_timestamps is None) == (rank_ts_blocks is None):
         raise ValueError(
@@ -117,8 +120,11 @@ def write_trace(trace_dir: str, *, registry: FunctionRegistry,
             ts_index = []
             for blocks in rank_ts_blocks:
                 entries = []
-                for blob, n, t_min, t_max in blocks:
-                    entries.append([off, len(blob), n, t_min, t_max])
+                for blob, n, t_min, t_max, n_bytes in blocks:
+                    e = [off, len(blob), n, t_min, t_max]
+                    if n_bytes is not None:
+                        e.append(n_bytes)
+                    entries.append(e)
                     f.write(blob)
                     off += len(blob)
                 ts_index.append(entries)
@@ -294,11 +300,13 @@ def validate_segment(trace_dir: str, entry: Dict[str, Any]) -> Optional[str]:
 
 
 def read_trace_timestamps(trace_dir: str
-                          ) -> Tuple[bytes, Optional[List[Any]]]:
-    """Only a trace directory's ``(timestamps.bin bytes, ts_index)`` --
-    ``ts_index`` is None for the legacy single-blob layout.  Lets callers
-    that reassemble timestamps (the merged-trace writer) skip decoding the
-    CST/CFG blobs entirely."""
+                          ) -> Tuple[bytes, Optional[List[Any]],
+                                     Dict[str, Any]]:
+    """Only a trace directory's ``(timestamps.bin bytes, ts_index, meta)``
+    -- ``ts_index`` is None for the legacy single-blob layout.  Lets
+    callers that reassemble timestamps (the merged-trace writer) skip
+    decoding the CST/CFG blobs entirely; the metadata rides along so wrap
+    counters (``tick_wraps``) survive the merge."""
     try:
         with open(os.path.join(trace_dir, "metadata.json")) as f:
             meta = json.load(f)
@@ -307,7 +315,7 @@ def read_trace_timestamps(trace_dir: str
     except (OSError, ValueError) as e:
         raise TraceFormatError(
             f"cannot read timestamps of {trace_dir!r}: {e}") from e
-    return ts_raw, meta.get("ts_index")
+    return ts_raw, meta.get("ts_index"), meta
 
 
 def load_segment(trace_dir: str, entry: Dict[str, Any]

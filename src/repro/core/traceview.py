@@ -50,10 +50,12 @@ from .patterns import IntraPatternDecoder
 from .reader import Record, _resolve_rank
 from .sequitur import (expand_grammar, expand_grammar_reversed,
                        terminal_counts, terminal_positions)
+from .specs import DATA_FUNCS
 from .timestamps import effective_exit
 
-_DATA_FUNCS = frozenset({"pwrite", "write", "pread", "read", "shard_write_at",
-                         "shard_read_at"})
+# record path and read side share one definition of "data-moving call"
+# (specs.DATA_FUNCS); the old name stays importable for existing callers
+_DATA_FUNCS = DATA_FUNCS
 _OPEN_FUNCS = ("open", "shard_open")
 _IO_LAYERS = ("posix", "shardio")
 _WRITE_FUNCS = ("pwrite", "shard_write_at")
@@ -271,6 +273,14 @@ class TraceView:
             self._ts[rank] = self._decompress_ts(rank)
         return self._ts[rank]
 
+    def timestamps_unwrapped(self, rank: int) -> Optional[np.ndarray]:
+        """(n, 2) int64 entry/exit ticks with the uint32 wrap (~71.6 min)
+        unwrapped into a monotonic clock: the store seeds the wrap base
+        from each segment's per-epoch ``tick_wraps`` metadata and detects
+        further in-epoch wraps from the tick sequence itself.  Not
+        memoized (days-long traces; callers keep what they need)."""
+        return self.ts_store.load_unwrapped(rank)
+
     # -- aggregate queries (grammar-weighted) ---------------------------------
 
     def io_summary(self) -> Dict[str, Any]:
@@ -479,8 +489,9 @@ class TraceView:
 
         Windows are in raw uint32 microsecond ticks, which wrap at ~71.6
         minutes (the trace format's documented tick policy): windowed
-        queries are exact within one wrap period; multi-hour absolute
-        windows need the 64-bit tick extension (ROADMAP open item)."""
+        queries are exact within one wrap period; for multi-hour absolute
+        windows rebase against :meth:`timestamps_unwrapped`, which serves
+        monotonic int64 ticks from the per-epoch wrap metadata."""
         if t0 is None and t1 is None:
             ts = self.timestamps(rank)
             if ts is None or not len(ts):
@@ -495,34 +506,47 @@ class TraceView:
         return self._overlap_sweep(ent, np.clip(effective_exit(ts), lo, hi))
 
     def bandwidth_bounds(self, t0: int, t1: int) -> Dict[str, Any]:
-        """Compressed-domain aggregate-bandwidth BOUNDS over ``[t0, t1)``.
+        """Compressed-domain aggregate bandwidth over ``[t0, t1)``.
 
-        Call counts come from the block-indexed timestamp stores (only
-        blocks intersecting the window are decompressed); byte bounds come
-        from the CST size columns (O(|CST|), no expansion): every windowed
-        call transfers at most the trace's largest data-call size, and at
-        least 0 when the trace mixes in metadata calls (else the smallest
-        data size).  Exact windowed attribution would need the expanded
-        row<->size alignment; these bounds answer monitoring questions
-        ("could this window have saturated the target?") from touched
-        blocks only.
+        Call counts AND data bytes come from the timestamp stores' windowed
+        stats (only blocks straddling the window edges are decompressed;
+        fully covered blocks are answered from the index).  Traces written
+        with per-block byte counters (the sized timestamp layout) get an
+        EXACT byte total -- ``lo_MBps == hi_MBps`` and ``exact: True`` --
+        matching a per-record walk.  Older traces without the counters fall
+        back to the CST-derived bounds: every windowed call transfers at
+        most the trace's largest data-call size, and at least 0 when the
+        trace mixes in metadata calls (else the smallest data size).
         """
         if not t1 > t0:
             raise ValueError("window must satisfy t1 > t0")
         n_calls = 0
+        n_bytes = 0
+        exact = True
         for r in range(self.nranks):
-            w = self.ts_store.window(r, t0, t1)
-            if w is not None:
-                n_calls += len(w)
-        data_sizes = [s.size for s in self._sigs if s.is_data]
-        any_non_data = any(not s.is_data for s in self._sigs)
-        hi_bytes = n_calls * (max(data_sizes) if data_sizes else 0)
-        lo_bytes = 0 if (any_non_data or not data_sizes) \
-            else n_calls * min(data_sizes)
+            stats = self.ts_store.window_stats(r, t0, t1)
+            if stats is None:
+                continue
+            n_calls += stats[0]
+            if stats[1] is None:
+                if stats[0]:
+                    exact = False
+            else:
+                n_bytes += stats[1]
         window_us = t1 - t0
+        if exact:
+            lo_bytes = hi_bytes = n_bytes
+        else:
+            data_sizes = [s.size for s in self._sigs if s.is_data]
+            any_non_data = any(not s.is_data for s in self._sigs)
+            hi_bytes = n_calls * (max(data_sizes) if data_sizes else 0)
+            lo_bytes = 0 if (any_non_data or not data_sizes) \
+                else n_calls * min(data_sizes)
         return {
             "n_calls": n_calls,
             "window_us": window_us,
+            "exact": exact,
+            "bytes": n_bytes if exact else None,
             "lo_MBps": lo_bytes / window_us,   # bytes/us == MB/s
             "hi_MBps": hi_bytes / window_us,
         }

@@ -18,9 +18,10 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
@@ -123,6 +124,114 @@ def axis_size(logical: str) -> int:
 
 def named(mesh: Mesh, *parts) -> NamedSharding:
     return NamedSharding(mesh, P(*parts))
+
+
+# ---------------------------------------------------------------------------
+# host-to-host byte transport (Recorder's point-to-point reduce carrier)
+# ---------------------------------------------------------------------------
+#
+# jax has no independent pairwise send: its point-to-point primitive is
+# ``lax.ppermute``, a COLLECTIVE permutation every process participates in.
+# ``PpermuteByteTransport.exchange`` therefore moves one log-round's worth
+# of pair payloads together -- ``comm.reduce_tree_via_exchange`` calls it
+# once per round with the round's (src, dst) list -- and only the round's
+# senders contribute non-empty arrays.  Payloads are opaque bytes
+# (serialized RankStates), packed into fixed-size length-prefixed uint8
+# device arrays so every process contributes an identically-shaped operand
+# (the SPMD requirement).
+
+#: presence byte + 4-byte little-endian payload length
+_LEN_HEADER = 5
+
+#: mesh axis the host transport permutes over (one device per process)
+HOST_AXIS = "hosts"
+
+
+def pack_bytes_array(payload: Optional[bytes], pad_to: int) -> np.ndarray:
+    """A byte payload as a fixed-size uint8 array: 1 presence byte, 4-byte
+    little-endian length, payload, zero padding.  ``None`` (rank sends
+    nothing this round) is distinct from ``b""`` -- the presence byte
+    round-trips it."""
+    n = 0 if payload is None else len(payload)
+    if pad_to < n + _LEN_HEADER:
+        raise ValueError(
+            f"pad_to={pad_to} cannot hold a {n}-byte payload plus the "
+            f"{_LEN_HEADER}-byte header")
+    arr = np.zeros(pad_to, dtype=np.uint8)
+    if payload is not None:
+        arr[0] = 1
+        arr[1:5] = np.frombuffer(n.to_bytes(4, "little"), dtype=np.uint8)
+        if n:
+            arr[_LEN_HEADER : _LEN_HEADER + n] = np.frombuffer(
+                payload, dtype=np.uint8)
+    return arr
+
+
+def unpack_bytes_array(arr) -> Optional[bytes]:
+    """Inverse of :func:`pack_bytes_array` (padding ignored)."""
+    a = np.asarray(arr, dtype=np.uint8).reshape(-1)
+    if a.size < _LEN_HEADER or a[0] == 0:
+        return None
+    n = int.from_bytes(a[1:5].tobytes(), "little")
+    return a[_LEN_HEADER : _LEN_HEADER + n].tobytes()
+
+
+class PpermuteByteTransport:
+    """Collective point-to-point byte mover between jax host processes.
+
+    ``exchange(payload, perm)`` must be called by EVERY process with the
+    same ``perm`` (a list of ``(src, dst)`` process pairs); it returns the
+    payload addressed to this process, or None.  Wire path: allgather the
+    payload lengths to agree on a common array size, pack to uint8, lay
+    the per-host arrays out over a 1-D ``hosts`` mesh (one device per
+    process) and move them with a single shard_map'd ``lax.ppermute``.
+
+    Requires a multi-process jax runtime; with one process every schedule
+    is empty, so ``exchange`` is never reached (``comm.JaxComm`` guards).
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None):
+        self._mesh = mesh
+
+    def _host_mesh(self) -> Mesh:
+        if self._mesh is None:
+            devs = [jax.local_devices(process_index=p)[0]
+                    for p in range(jax.process_count())]
+            self._mesh = Mesh(np.asarray(devs), (HOST_AXIS,))
+        return self._mesh
+
+    def exchange(self, payload: Optional[bytes],
+                 perm: List[Tuple[int, int]]) -> Optional[bytes]:
+        if not perm:
+            return None
+        from jax.experimental import multihost_utils
+
+        n = 0 if payload is None else len(payload)
+        cap = int(multihost_utils.process_allgather(
+            np.asarray([n], np.int64)).max()) + _LEN_HEADER
+        local = pack_bytes_array(payload, cap)[None, :]
+        mesh = self._host_mesh()
+        spec_ = P(HOST_AXIS, None)
+        global_arr = multihost_utils.host_local_array_to_global_array(
+            local, mesh, spec_)
+        shifted = get_shard_map()(
+            lambda x: jax.lax.ppermute(x, HOST_AXIS, perm),
+            mesh=mesh, in_specs=spec_, out_specs=spec_)(global_arr)
+        back = multihost_utils.global_array_to_host_local_array(
+            shifted, mesh, spec_)
+        return unpack_bytes_array(np.asarray(back)[0])
+
+
+def global_any(flag: bool) -> bool:
+    """Cross-process boolean OR (the flush-cadence vote): allgather one
+    uint8 per process and reduce locally.  Identity with one process."""
+    if jax.process_count() == 1:
+        return bool(flag)
+    from jax.experimental import multihost_utils
+
+    votes = multihost_utils.process_allgather(
+        np.asarray([1 if flag else 0], np.uint8))
+    return bool(np.asarray(votes).any())
 
 
 # ---------------------------------------------------------------------------

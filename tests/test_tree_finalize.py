@@ -345,3 +345,35 @@ def test_tree_state_constant_in_ranks():
     # serialized state grows only by the per-rank stream index varints
     assert len(serialize_rank_state(big)) <= \
         len(serialize_rank_state(small)) + 2 * (128 - 8) + 16
+
+
+# ---------------------------------------------------------------------------
+# near-uniform remap stream cache (materialize_state fast path)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24),
+       st.sampled_from(["linear", "constant", "irregular", "mixed",
+                        "mixed_all"]),
+       st.integers(1, 5), st.integers(1, 6), st.integers(0, 2 ** 20))
+def test_materialize_stream_cache_matches_uncached(nranks, pattern, n_groups,
+                                                   n_calls, seed):
+    """Near-uniform remap-stream reuse (uniform prefix shared, only the
+    irregular rows re-interned per rank) is byte-identical to the
+    cache-disabled reference walk AND to the flat finalize."""
+    csts, cfgs = synth_rank_states(nranks, n_groups=n_groups,
+                                   n_calls=n_calls, pattern=pattern,
+                                   seed=seed)
+    state = tree_reduce_states([make_rank_state(r, csts[r], cfgs[r], REGISTRY)
+                                for r in range(nranks)])
+    for inter in (True, False):
+        cached = materialize_state(state, inter_patterns=inter,
+                                   cache_streams=True)
+        _assert_same_finalize(
+            cached,
+            materialize_state(state, inter_patterns=inter,
+                              cache_streams=False))
+        _assert_same_finalize(
+            cached,
+            finalize_ranks(csts, cfgs, REGISTRY, inter_patterns=inter))
