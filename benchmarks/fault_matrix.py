@@ -1,0 +1,218 @@
+"""Fault-injection scenario matrix: the durability contract, enforced.
+
+Drives a fixed, seeded matrix of streamed tracing runs with faults
+injected through :mod:`repro.core.faults` -- comm message drops/delays, a
+rank going mute mid-run, mid-commit crashes at every commit point, torn
+in-flight writes, post-commit bit rot and ENOSPC -- and asserts, for
+every scenario, the one property the fault-tolerance work exists to
+provide:
+
+  the surviving trace directory is fully readable, or the damage is
+  REPORTED (skipped segments / ``ranks_present`` degraded masks /
+  a typed error) -- never a trace that decodes but lies;
+  and no survivor deadlocks: every scenario completes within its
+  timeout budget.
+
+Record accounting is exact: each scenario states how many records MUST
+be served (committed, intact epochs) and the decoded count is checked
+against it, so a fault can neither silently drop a committed record nor
+double-count a retried one.
+
+Writes artifacts/bench/fault_matrix.json:
+  {"config": ..., "rows": [one per scenario with the invariant report]}
+
+    PYTHONPATH=src python -m benchmarks.fault_matrix [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import shutil
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core import faults, trace_format
+from repro.core.comm import run_thread_world
+from repro.core.faults import FaultPlan, SimulatedCrash
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+import repro.core.apis  # noqa: F401  (populate registry)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+SEED = 20260808
+FLUSH_TIMEOUT_S = 2.0
+#: hard wall-clock ceiling per scenario -- the no-deadlock assertion
+SCENARIO_BUDGET_S = 60.0
+
+
+def _feed(rec: Recorder, rank: int, nranks: int, n: int, seed: int,
+          tick_start: int = 0) -> int:
+    fid = REGISTRY.id_of("pwrite")
+    rng = random.Random(seed * 1000003 + rank)
+    t = tick_start
+    for i in range(n):
+        off = rank * 4096 + i * nranks * 4096 + rng.randrange(16) * 512
+        rec.record(fid, (f"fd-{rank}", b"x" * 4096, off), 4096, 0, t, t + 1)
+        t += 2
+    return t
+
+
+def _run_scenario(name: str, *, nranks: int, plan: Optional[FaultPlan],
+                  epochs: int = 3, records_per_epoch: int = 50,
+                  uninstall_after_epoch: Optional[int] = None,
+                  rot_file: Optional[str] = None) -> Dict[str, Any]:
+    """One streamed run under ``plan``; returns the invariant report row.
+
+    Crashes/ENOSPC are caught per rank exactly as a driver supervising a
+    preempted job would observe them; ``uninstall_after_epoch`` models
+    the fault clearing (node recovers, disk space freed) so later
+    flushes can cover the retained deltas.
+    """
+    sd = tempfile.mkdtemp(prefix="fault_matrix_")
+    t0 = time.perf_counter()
+    if plan is not None:
+        faults.install(plan)
+    try:
+        def worker(comm, rank):
+            import warnings as W
+            with W.catch_warnings():
+                W.simplefilter("ignore")
+                rec = Recorder(rank=rank, config=RecorderConfig(
+                    trace_dir=sd,
+                    flush_timeout_s=FLUSH_TIMEOUT_S if nranks > 1 else None))
+                t, failures = 0, 0
+                for e in range(epochs):
+                    t = _feed(rec, rank, nranks, records_per_epoch,
+                              SEED + e, t)
+                    try:
+                        rec.flush(comm)
+                    except (OSError, SimulatedCrash):
+                        failures += 1
+                    if nranks > 1:
+                        comm.barrier()
+                    if rank == 0 and uninstall_after_epoch == e:
+                        faults.uninstall()
+                    if nranks > 1:
+                        comm.barrier()
+                try:
+                    rec.finalize(comm)
+                except (OSError, SimulatedCrash):
+                    failures += 1
+                return {"failures": failures,
+                        "restored": rec.epochs_restored,
+                        "degraded": rec.epochs_degraded}
+
+        if nranks == 1:
+            rank_stats = [worker(None, 0)]
+        else:
+            rank_stats = run_thread_world(nranks, worker)
+    finally:
+        faults.uninstall()
+    if rot_file is not None:
+        # post-commit bit rot on the oldest committed segment
+        segs = trace_format.read_manifest(sd).get("segments", [])
+        if segs:
+            faults.corrupt_file(
+                os.path.join(sd, segs[0]["name"], rot_file), seed=SEED)
+    elapsed = time.perf_counter() - t0
+    report = faults.check_trace_invariants(sd)
+    manifest = trace_format.read_manifest(sd) \
+        if trace_format.is_stream_dir(sd) else {"segments": []}
+    # exact accounting: served records == sum of the intact committed
+    # segments' manifest counts (a degraded epoch's count already reflects
+    # only the present ranks)
+    skipped = {s["segment"] for s in report["skipped"]}
+    expected = sum(e["n_records"] for e in manifest["segments"]
+                   if e["name"] not in skipped)
+    row = {
+        "scenario": name,
+        "nranks": nranks,
+        "plan": {k: v for k, v in (plan.__dict__.items() if plan else [])
+                 if not k.startswith("_") and k != "counters" and v},
+        "fault_counters": dict(plan.counters) if plan else {},
+        "rank_stats": rank_stats,
+        "elapsed_s": round(elapsed, 3),
+        "within_budget": elapsed < SCENARIO_BUDGET_S,
+        "n_committed_segments": len(manifest["segments"]),
+        "invariants": report,
+        "expected_records": expected,
+        "accounting_exact": report["n_records"] == expected,
+        "ok": (report["readable"] or report["error"] is not None)
+        and report["n_records"] == expected
+        and elapsed < SCENARIO_BUDGET_S,
+    }
+    shutil.rmtree(sd, ignore_errors=True)
+    return row
+
+
+def scenarios(fast: bool) -> List[Dict[str, Any]]:
+    nr = 2 if fast else 4
+    rows = [
+        dict(name="baseline_no_faults", nranks=nr, plan=None),
+        dict(name="enospc_then_recover", nranks=1,
+             plan=FaultPlan(seed=SEED, fail_write_at=7),
+             uninstall_after_epoch=1),
+        dict(name="crash_pre_rename", nranks=1,
+             plan=FaultPlan(seed=SEED, crash_point="pre-rename",
+                            crash_epoch=1), uninstall_after_epoch=1),
+        dict(name="crash_pre_manifest", nranks=1,
+             plan=FaultPlan(seed=SEED, crash_point="pre-manifest",
+                            crash_epoch=1), uninstall_after_epoch=1),
+        dict(name="torn_write_in_flight", nranks=1,
+             plan=FaultPlan(seed=SEED, torn_file="merged_cst.bin",
+                            torn_at=2)),
+        dict(name="bit_rot_post_commit", nranks=1, plan=None,
+             rot_file="unique_cfgs.bin"),
+        dict(name="dead_rank_degraded_commit", nranks=nr,
+             plan=FaultPlan(seed=SEED, dead_ranks=(1,)),
+             uninstall_after_epoch=0),
+        dict(name="message_delays_within_timeout", nranks=nr,
+             plan=FaultPlan(seed=SEED, delay_prob=0.5, delay_s=0.05),
+             uninstall_after_epoch=2),
+    ]
+    if not fast:
+        rows.append(dict(
+            name="random_drops_survivors_commit", nranks=nr,
+            plan=FaultPlan(seed=SEED, drop_prob=0.05),
+            uninstall_after_epoch=1))
+    return rows
+
+
+def main(fast: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    rows = [_run_scenario(s.pop("name"), **s) for s in scenarios(fast)]
+    out = {"config": {"fast": fast, "seed": SEED,
+                      "flush_timeout_s": FLUSH_TIMEOUT_S,
+                      "scenario_budget_s": SCENARIO_BUDGET_S},
+           "rows": rows}
+    with open(os.path.join(ART, "fault_matrix.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    lines = []
+    for row in rows:
+        inv = row["invariants"]
+        lines.append(
+            f"fault_matrix,{row['scenario']},nranks={row['nranks']},"
+            f"records={inv['n_records']}/{row['expected_records']},"
+            f"skipped={len(inv['skipped'])},"
+            f"degraded={len(inv['degraded_epochs'])},"
+            f"elapsed_s={row['elapsed_s']},ok={row['ok']}")
+        assert row["within_budget"], (
+            f"{row['scenario']}: took {row['elapsed_s']}s -- a survivor "
+            f"wedged past the timeout budget")
+        assert row["ok"], (
+            f"{row['scenario']}: trace neither fully readable nor "
+            f"correctly reported ({inv})")
+    baseline = rows[0]["invariants"]
+    assert baseline["n_records"] > 0 and not baseline["skipped"], \
+        "baseline scenario must serve a complete trace"
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main(fast="--smoke" in sys.argv or "--fast" in sys.argv):
+        print(line)

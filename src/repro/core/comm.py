@@ -59,7 +59,16 @@ import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 #: seconds a ThreadComm recv waits before concluding the peer is gone
+#: (the default; per-call ``recv(..., timeout=)`` and the degraded
+#: collectives override it with the configured flush timeout)
 _RECV_TIMEOUT_S = 60.0
+
+
+class CommTimeout(RuntimeError):
+    """A point-to-point receive (or a timed collective built on one) gave
+    up waiting for a peer.  The degraded flush protocol catches this to
+    substitute an absent rank's contribution; anything else propagating it
+    means a peer really is gone."""
 
 
 def reduce_rounds(size: int) -> List[List[Tuple[int, int]]]:
@@ -124,8 +133,10 @@ class Comm:
         """Point-to-point send (only on transports with ``has_p2p``)."""
         raise NotImplementedError
 
-    def recv(self, source: int) -> Any:
-        """Point-to-point receive (only on transports with ``has_p2p``)."""
+    def recv(self, source: int, timeout: Optional[float] = None) -> Any:
+        """Point-to-point receive (only on transports with ``has_p2p``).
+        ``timeout`` overrides the transport's default patience; expiry
+        raises :class:`CommTimeout`."""
         raise NotImplementedError
 
     def dup(self, key: str = "dup") -> "Comm":
@@ -195,6 +206,126 @@ class Comm:
         if merged is None:
             return None
         return [v for _, v in sorted(merged, key=lambda rv: rv[0])]
+
+    # -- degraded (fault-tolerant) collectives --------------------------------
+    #
+    # The timed collectives below are entirely barrier-free: they run on
+    # tagged point-to-point messages only, so a dead or unresponsive rank
+    # stalls exactly the peers waiting on it for exactly the configured
+    # timeout -- never the whole world forever.  Every invocation bumps a
+    # per-comm sequence counter used as the message tag; because the alive
+    # ranks invoke collectives in lockstep (collective call discipline),
+    # a receiver can discard any message tagged below its expectation
+    # (a straggler from an earlier, already-degraded collective) without
+    # ambiguity.  Callers must therefore issue all timed collectives on
+    # one comm object in the same order on every participating rank.
+
+    def _bump_seq(self) -> int:
+        s = getattr(self, "_p2p_seq", 0) + 1
+        self._p2p_seq = s
+        return s
+
+    def _recv_tagged(self, source: int, tag: int,
+                     timeout: Optional[float]) -> Any:
+        """Receive from ``source`` discarding stale (lower-tagged)
+        messages; raises :class:`CommTimeout` on expiry and RuntimeError
+        on a future tag (a protocol bug, not a fault)."""
+        while True:
+            t, payload = self.recv(source, timeout=timeout)
+            if t == tag:
+                return payload
+            if t > tag:
+                raise RuntimeError(
+                    f"rank {self.rank}: tag {t} from rank {source} is ahead "
+                    f"of expected {tag} -- timed collectives were not "
+                    f"invoked in lockstep")
+            # t < tag: a delayed straggler from an earlier collective
+
+    def reduce_tree_partial(self, obj: Any, fn: Callable[[Any, Any], Any],
+                            absent: Callable[[int, int], Any],
+                            timeout: Optional[float]) -> Optional[Any]:
+        """The log-round tree reduction with per-hop receive timeouts:
+        when the peer owning ranks ``[src, hi)`` never delivers, its whole
+        subtree contribution is substituted with ``absent(src, hi)`` (an
+        explicitly-empty block), so the fold stays structurally complete
+        and rank 0 still finishes within O(log N) timeouts.  Root returns
+        the folded value, other ranks None."""
+        assert self.has_p2p, "reduce_tree_partial needs a p2p transport"
+        tag = self._bump_seq()
+        val = obj
+        s = 1
+        r = self.rank
+        while s < self.size:
+            if r % (2 * s) == s:
+                self.send((tag, val), r - s)
+                return None
+            if r % (2 * s) == 0 and r + s < self.size:
+                src = r + s
+                try:
+                    got = self._recv_tagged(src, tag, timeout)
+                except CommTimeout:
+                    got = absent(src, min(src + s, self.size))
+                val = fn(val, got)
+            s *= 2
+        return val if r == 0 else None
+
+    def verdict_patience(self, timeout: Optional[float]) -> Optional[float]:
+        """How long a non-root rank should wait for rank 0's
+        post-collective verdict.  Rank 0 may legitimately spend one full
+        ``timeout`` per tree round absorbing dead subtrees before it can
+        fan anything out, so a verdict wait equal to the per-hop timeout
+        would race rank 0's own patience and spuriously self-degrade;
+        scale it by tree depth plus one round of slack for rank 0's local
+        work (the segment commit)."""
+        if timeout is None:
+            return None
+        rounds = max(1, (self.size - 1).bit_length())
+        return timeout * (rounds + 1)
+
+    def bcast_p2p(self, obj: Any, timeout: Optional[float]) -> Any:
+        """Rank 0 fans ``obj`` out over point-to-point sends; other ranks
+        receive it with a timeout (:class:`CommTimeout` on expiry -- the
+        caller decides what a missing verdict means).  A flat fan-out, not
+        a tree: an absent interior rank must not cut its subtree off from
+        the verdict."""
+        assert self.has_p2p, "bcast_p2p needs a p2p transport"
+        tag = self._bump_seq()
+        if self.rank == 0:
+            for dst in range(1, self.size):
+                self.send((tag, obj), dst)
+            return obj
+        return self._recv_tagged(0, tag, timeout)
+
+    def agree(self, flag: bool, timeout: Optional[float] = None
+              ) -> Tuple[bool, frozenset]:
+        """Survivor vote: boolean OR over the ranks that answered in time.
+
+        Returns ``(verdict, present)`` where ``present`` is the set of
+        ranks whose votes reached rank 0.  With no timeout (or no p2p
+        transport) this is exactly :meth:`vote_any` with full presence;
+        with a timeout it is the degraded protocol's barrier replacement:
+        unresponsive ranks are voted around, and a rank that cannot even
+        reach rank 0's verdict falls back to its own flag with
+        self-only presence (its caller then treats the step as failed
+        locally instead of deadlocking)."""
+        if self.size == 1:
+            return bool(flag), frozenset({self.rank})
+        if timeout is None or not self.has_p2p:
+            return self.vote_any(flag), frozenset(range(self.size))
+        leaf = (bool(flag), (self.rank,))
+        folded = self.reduce_tree_partial(
+            leaf, lambda a, b: (a[0] or b[0], a[1] + b[1]),
+            lambda lo, hi: (False, ()), timeout)
+        if self.rank == 0:
+            verdict, present = bool(folded[0]), frozenset(folded[1])
+            self.bcast_p2p((verdict, sorted(present)), timeout)
+            return verdict, present
+        try:
+            verdict, present = self.bcast_p2p(
+                None, self.verdict_patience(timeout))
+        except CommTimeout:
+            return bool(flag), frozenset({self.rank})
+        return bool(verdict), frozenset(present)
 
 
 class SoloComm(Comm):
@@ -274,29 +405,47 @@ class ThreadComm(Comm):
         return ThreadComm(self._w.subworld(key), self.rank)
 
     def send(self, obj: Any, dest: int) -> None:
-        self._w.mailbox(self.rank, dest).put(obj)
+        from . import faults
 
-    def recv(self, source: int) -> Any:
+        plan = faults.get_active()
+        q = self._w.mailbox(self.rank, dest)
+        if plan is not None:
+            act = plan.on_send(self.rank, dest)
+            if act == "drop":
+                return
+            if isinstance(act, float):
+                t = threading.Timer(act, q.put, args=(obj,))
+                t.daemon = True
+                t.start()
+                return
+        q.put(obj)
+
+    def recv(self, source: int, timeout: Optional[float] = None) -> Any:
         """Blocking per-pair FIFO receive.  Each (src, dst) channel is its
         own queue, so a fast sender racing ahead into the next collective
         cannot overtake its earlier message; a failed peer (the world's
         ``failed`` flag, set by ``run_thread_world``) unblocks the wait
-        with an error instead of deadlocking."""
+        with an error instead of deadlocking.  Polling backs off
+        exponentially (1ms -> 50ms) so short timeouts stay responsive
+        without spinning the long waits."""
         q = self._w.mailbox(source, self.rank)
+        limit = _RECV_TIMEOUT_S if timeout is None else timeout
         waited = 0.0
+        poll = 0.001
         while True:
             try:
-                return q.get(timeout=0.05)
+                return q.get(timeout=poll)
             except queue.Empty:
                 if self._w.failed.is_set():
                     raise RuntimeError(
                         f"rank {self.rank}: peer failed while receiving "
                         f"from rank {source}") from None
-                waited += 0.05
-                if waited >= _RECV_TIMEOUT_S:
-                    raise RuntimeError(
+                waited += poll
+                if waited >= limit:
+                    raise CommTimeout(
                         f"rank {self.rank}: timed out receiving from rank "
-                        f"{source} after {_RECV_TIMEOUT_S:.0f}s") from None
+                        f"{source} after {limit:g}s") from None
+                poll = min(poll * 2, 0.05)
 
     def gather(self, obj, root=0):
         self._w.slots[self.rank] = obj

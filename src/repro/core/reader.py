@@ -82,6 +82,9 @@ class TraceReader:
             raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
         self.mode = mode
         self.skipped: List[Dict[str, str]] = []
+        # degraded (rank-failure) epochs this reader serves: segment name ->
+        # sorted ranks whose contribution made it into that epoch
+        self.degraded_epochs: Dict[str, List[int]] = {}
         self.n_segments = 1
         if trace_format.is_stream_dir(trace_dir):
             self._init_stream(trace_dir, mode)
@@ -97,6 +100,11 @@ class TraceReader:
 
     def _init_single(self, data: Dict[str, Any]) -> None:
         self.meta = data["meta"]
+        # a merged trace carries the degraded map in its metadata; a plain
+        # single-segment trace has neither key
+        self.degraded_epochs = {
+            str(k): list(v)
+            for k, v in (self.meta.get("degraded_epochs") or {}).items()}
         self.merged_cst: List[bytes] = data["merged_cst"]
         self.unique_cfgs = [parse_grammar(c) for c in data["unique_cfgs"]]
         self.cfg_index: List[int] = data["cfg_index"]
@@ -142,6 +150,9 @@ class TraceReader:
                 data = self._read_segment(trace_dir, entry)
                 if data is not None:
                     datas = [data]
+                    if "ranks_present" in entry:
+                        self.degraded_epochs[entry["name"]] = \
+                            list(entry["ranks_present"])
                     break
         else:
             # full stitch: the one shared definition of "read a stream
@@ -149,6 +160,10 @@ class TraceReader:
             stream = trace_format.read_stream_trace(trace_dir)
             self.skipped.extend(stream["skipped"])
             datas = [s["data"] for s in stream["segments"]]
+            for s in stream["segments"]:
+                if "ranks_present" in s["entry"]:
+                    self.degraded_epochs[s["entry"]["name"]] = \
+                        list(s["entry"]["ranks_present"])
         if not datas:
             raise TraceFormatError(
                 f"no intact epoch segments in {trace_dir!r} "
@@ -160,6 +175,39 @@ class TraceReader:
         self.cfg_index = st["cfg_index"]
         self.ts_store = st["ts_store"]
         self.n_segments = st["n_segments"]
+
+    @property
+    def degraded(self) -> bool:
+        """True when this reader serves PARTIAL coverage: rank-failure
+        (degraded) epochs missing some ranks' windows, or committed
+        segments skipped for corruption.  Analyses over a degraded trace
+        are exact for what is present but not the full job's history."""
+        return bool(self.degraded_epochs or self.skipped)
+
+    @property
+    def ranks_partial(self) -> List[int]:
+        """Ranks absent from at least one served epoch (their record
+        streams have gaps where a degraded flush committed without
+        them)."""
+        out: set = set()
+        for present in self.degraded_epochs.values():
+            out |= set(range(self.nranks)) - set(present)
+        return sorted(out)
+
+    def coverage(self) -> Dict[str, Any]:
+        """What this reader actually serves, for tooling and reports:
+        degraded epochs (with their present-rank masks), ranks with
+        gapped streams, skipped-corrupt segments, and an overall
+        ``complete`` verdict."""
+        return {
+            "mode": self.mode,
+            "n_segments": self.n_segments,
+            "complete": not self.degraded,
+            "degraded_epochs": {k: list(v)
+                                for k, v in self.degraded_epochs.items()},
+            "ranks_partial": self.ranks_partial,
+            "skipped": list(self.skipped),
+        }
 
     def view(self) -> "TraceView":  # noqa: F821  (lazy import below)
         """The compressed-domain columnar query API over this trace

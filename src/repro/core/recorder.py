@@ -30,6 +30,8 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
 from .comm import Comm, SoloComm
 from .cst import CST
 from .encoding import Handle
@@ -37,7 +39,7 @@ from .interprocess import (deserialize_rank_state, finalize_ranks,
                            make_rank_state, materialize_state,
                            merge_serialized_states, serialize_rank_state)
 from .patterns import IntraPatternTracker
-from .sequitur import Sequitur
+from .sequitur import Sequitur, concat_grammars
 from .specs import DATA_FUNCS, REGISTRY, FunctionRegistry, Role
 from .timestamps import TimestampBuffer, compress_timestamps
 from . import streaming, trace_format
@@ -99,6 +101,18 @@ class RecorderConfig:
     # flight coalesces (its records ride the next epoch).  Errors from the
     # background commit surface on the next flush()/finalize()/drain().
     async_flush: bool = False
+    # crash-resume: when flushing into an existing streaming trace
+    # directory, rank 0 rebuilds the cumulative state from the committed
+    # segments' state.bin deltas, so a preempted-and-restarted run keeps
+    # appending epochs AND still writes a merged/ covering the full history
+    resume: bool = True
+    # degraded fault-tolerant flushes: when set (and the comm has true
+    # point-to-point transport), every flush collective runs barrier-free
+    # with this per-hop receive timeout -- an unresponsive rank is voted
+    # around and the survivors commit a partial epoch carrying a
+    # ranks_present mask; a rank whose delta missed the commit keeps it
+    # in memory for the next attempt (see streaming.run_flush_degraded)
+    flush_timeout_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         # the same bounds from_env enforces, so directly-constructed
@@ -118,6 +132,9 @@ class RecorderConfig:
         if self.ts_block_records < 1:
             raise ValueError(
                 f"ts_block_records must be >= 1, got {self.ts_block_records}")
+        if self.flush_timeout_s is not None and not self.flush_timeout_s > 0:
+            raise ValueError("flush_timeout_s must be > 0, got "
+                             f"{self.flush_timeout_s}")
 
     @classmethod
     def from_env(cls, **overrides) -> "RecorderConfig":
@@ -155,6 +172,11 @@ class RecorderConfig:
             cfg.ts_block_records = b
         if os.environ.get("RECORDER_ASYNC_FLUSH"):
             cfg.async_flush = True
+        if os.environ.get("RECORDER_NO_RESUME"):
+            cfg.resume = False
+        t = _env_float("RECORDER_FLUSH_TIMEOUT_S")
+        if t is not None:
+            cfg.flush_timeout_s = t
         return cfg
 
 
@@ -212,6 +234,16 @@ class Recorder:
         # summed per-flush byte sizes for the final RecorderStats
         self._cum = streaming.CumulativeState()
         self._stream_totals = RecorderStats()
+        # a snapshotted epoch whose commit failed (or committed without
+        # this rank): prepended to the next take_epoch so the next
+        # successful flush covers those records exactly once
+        self._pending: Optional[Tuple[List[bytes], bytes, Any, int]] = None
+        self._records_at_flush_prev = 0
+        self._resume_checked = False
+        self.epochs_resumed = 0    # epochs recovered by crash-resume
+        self.epochs_degraded = 0   # commits that went through partial
+        self.epochs_restored = 0   # failed commits whose delta was kept
+        self.last_flush_outcome: Optional[streaming.FlushOutcome] = None
         # first (unmasked) tick of the current epoch -> per-epoch wrap base
         self._epoch_first_tick: Optional[int] = None
         # -- async flush state (config.async_flush) -----------------------------
@@ -401,7 +433,12 @@ class Recorder:
         sequence.  The wrap counter is how many times the uint32
         microsecond clock had wrapped at the epoch's first record --
         readers seed timestamp unwrapping with it, so days-long streamed
-        runs keep monotonic int64 timestamps."""
+        runs keep monotonic int64 timestamps.
+
+        A pending snapshot from a failed earlier commit is spliced in
+        FRONT of the live delta (CST concat + ``concat_grammars`` -- the
+        same layout segment stitching produces), so retried records land
+        in the next committed epoch exactly once."""
         with self._lock:
             entries = self.cst.entries
             cfg = self.grammar.serialize()
@@ -412,7 +449,17 @@ class Recorder:
             self.grammar = Sequitur()
             self.intra = IntraPatternTracker(
                 enabled=self.config.intra_patterns)
+            self._records_at_flush_prev = self._records_at_flush
             self._records_at_flush = self.n_records
+            if self._pending is not None:
+                p_entries, p_cfg, p_ticks, p_wraps = self._pending
+                self._pending = None
+                cfg = concat_grammars([(p_cfg, 0), (cfg, len(p_entries))])
+                entries = list(p_entries) + list(entries)
+                if len(p_ticks):
+                    ticks = np.concatenate([p_ticks, ticks], axis=0) \
+                        if len(ticks) else p_ticks
+                    wraps = p_wraps
         return entries, cfg, ticks, wraps
 
     def flush(self, comm: Optional[Comm] = None,
@@ -452,8 +499,41 @@ class Recorder:
                 raise RuntimeError("recorder already finalized")
             return self._flush_impl(comm, trace_dir)
 
+    def _maybe_resume(self, comm: Comm, trace_dir: str) -> None:
+        """Crash-resume: before the first commit into an EXISTING stream
+        directory, rank 0 rebuilds the cross-epoch cumulative state by
+        folding the committed segments' ``state.bin`` deltas
+        (:func:`streaming.resume_cumulative_state`), so a preempted-and-
+        restarted run keeps appending epochs AND a clean finalize still
+        writes ``merged/`` covering the FULL history.  Checked once per
+        recorder; disabled by ``config.resume=False`` and meaningless
+        under ring retention (no merged trace there).  An unresumable
+        directory (corrupt/truncated segment) degrades to the old
+        append-without-merged behavior with a warning."""
+        if self._resume_checked:
+            return
+        self._resume_checked = True
+        if (not self.config.resume or comm.rank != 0
+                or self.config.max_epochs_retained is not None
+                or self._cum.n_epochs != 0
+                or not trace_dir or not trace_format.is_stream_dir(trace_dir)):
+            return
+        try:
+            cum = streaming.resume_cumulative_state(trace_dir)
+        except trace_format.TraceFormatError as e:
+            warnings.warn(
+                f"cannot resume cumulative state from existing trace dir "
+                f"{trace_dir!r} ({e}); new epochs will append but no "
+                f"full-history merged trace can be written on finalize",
+                RuntimeWarning)
+            return
+        if cum.n_epochs:
+            self._cum = cum
+            self.epochs_resumed = cum.n_epochs
+
     def _flush_impl(self, comm: Comm, trace_dir: str
                     ) -> Optional[Dict[str, Any]]:
+        self._maybe_resume(comm, trace_dir)
         if self.config.async_flush:
             return self._flush_async_locked(comm, trace_dir)
         return self._flush_locked(comm, trace_dir)
@@ -474,7 +554,7 @@ class Recorder:
         if comm.size > 1:
             # lockstep coalesce: if ANY rank is still committing, every
             # rank coalesces -- local decisions could desync epoch counts
-            busy = comm.vote_any(busy)
+            busy = self._vote(comm, busy)
         if busy:
             self.epochs_coalesced += 1
             return None
@@ -489,18 +569,83 @@ class Recorder:
             ticks, wraps, epoch)
         return None
 
+    def _degraded(self, comm: Comm) -> bool:
+        """True when flushes run the timed, failure-tolerant protocol:
+        a flush timeout is configured and the comm has a p2p transport
+        (the degraded collectives are barrier-free p2p trees)."""
+        return (self.config.flush_timeout_s is not None
+                and comm.size > 1
+                and getattr(comm, "has_p2p", False))
+
+    def _vote(self, comm: Comm, flag: bool) -> bool:
+        """Lockstep OR-vote; under the degraded protocol uses the timed
+        survivor vote so a dead rank cannot hang cadence decisions."""
+        if self._degraded(comm):
+            return comm.agree(flag, self.config.flush_timeout_s)[0]
+        return comm.vote_any(flag)
+
+    def _restore_epoch(self, entries: List[bytes], cfg: bytes, ticks: Any,
+                       wraps: int) -> None:
+        """Put a snapshotted-but-uncommitted epoch delta back: the next
+        ``take_epoch`` splices it in front of the live delta, so a failed
+        flush loses nothing and the retry covers its records exactly
+        once.  A second failure before the retry keeps the OLDEST
+        snapshot's splice position (it already contains this one)."""
+        with self._lock:
+            self._pending = (entries, cfg, ticks, wraps)
+            self._records_at_flush = self._records_at_flush_prev
+            self.epoch -= 1
+            self.epochs_restored += 1
+
     def _commit_epoch(self, comm: Comm, trace_dir: str, entries: List[bytes],
                       cfg: bytes, ticks: Any, wraps: int, epoch: int
                       ) -> Optional[Dict[str, Any]]:
         """Reduce + write one already-snapshotted epoch (the part a
-        background flush moves off the application's critical path)."""
-        entry = streaming.run_flush(
-            comm, entries=entries, cfg=cfg, ticks=ticks,
-            registry=self.registry, trace_dir=trace_dir, epoch=epoch,
-            cum=self._cum, inter_patterns=self.config.inter_patterns,
-            ts_block_records=self.config.ts_block_records,
-            max_epochs_retained=self.config.max_epochs_retained,
-            meta_extra={**self._metadata(comm.size), "tick_wraps": wraps})
+        background flush moves off the application's critical path).
+
+        Any failure path restores the snapshot into ``_pending`` before
+        propagating, so epoch records are never silently dropped: a
+        crashed write, a lost survivor vote, or this rank being absent
+        from a degraded commit all leave the delta intact for the next
+        flush attempt."""
+        try:
+            if self._degraded(comm):
+                outcome = streaming.run_flush_degraded(
+                    comm, entries=entries, cfg=cfg, ticks=ticks,
+                    registry=self.registry, trace_dir=trace_dir, epoch=epoch,
+                    cum=self._cum, inter_patterns=self.config.inter_patterns,
+                    ts_block_records=self.config.ts_block_records,
+                    max_epochs_retained=self.config.max_epochs_retained,
+                    meta_extra={**self._metadata(comm.size),
+                                "tick_wraps": wraps},
+                    timeout_s=self.config.flush_timeout_s)
+                self.last_flush_outcome = outcome
+                if outcome.exc is not None:
+                    raise outcome.exc
+                if outcome.lost_local or not outcome.ok:
+                    self._restore_epoch(entries, cfg, ticks, wraps)
+                    warnings.warn(
+                        f"epoch {epoch} flush did not include this rank "
+                        f"({outcome.error or 'commit outcome unknown'}); "
+                        f"its records were retained and ride the next "
+                        f"flush", RuntimeWarning)
+                    return None
+                if (comm.rank == 0 and outcome.ranks_present
+                        and len(outcome.ranks_present) < comm.size):
+                    self.epochs_degraded += 1
+                entry = outcome.entry
+            else:
+                entry = streaming.run_flush(
+                    comm, entries=entries, cfg=cfg, ticks=ticks,
+                    registry=self.registry, trace_dir=trace_dir, epoch=epoch,
+                    cum=self._cum, inter_patterns=self.config.inter_patterns,
+                    ts_block_records=self.config.ts_block_records,
+                    max_epochs_retained=self.config.max_epochs_retained,
+                    meta_extra={**self._metadata(comm.size),
+                                "tick_wraps": wraps})
+        except BaseException:
+            self._restore_epoch(entries, cfg, ticks, wraps)
+            raise
         if entry is not None:
             t = self._stream_totals
             t.epochs += 1
@@ -533,8 +678,9 @@ class Recorder:
         if exc is not None:
             raise RuntimeError(
                 "background epoch commit failed; its epoch's records were "
-                "lost (snapshotted out of the live recorder) but the trace "
-                "directory and cumulative state remain consistent") from exc
+                "retained (restored as a pending delta that rides the next "
+                "flush) and the trace directory and cumulative state remain "
+                "consistent") from exc
 
     def _drain_locked(self) -> None:
         fut = self._inflight
@@ -565,7 +711,7 @@ class Recorder:
         comm = comm or self._comm or SoloComm()
         due = self._flush_due()
         if comm.size > 1:
-            due = comm.vote_any(due)
+            due = self._vote(comm, due)
         if not due:
             return None
         return self.flush(comm, trace_dir)
@@ -677,6 +823,7 @@ class Recorder:
             # takes it.
             with self._flush_lock:
                 self._drain_locked()
+                self._maybe_resume(comm, trace_dir)
                 if (comm.size > 1 or self.epoch == 0
                         or self.n_records > self._records_at_flush):
                     self._flush_locked(comm, trace_dir)
@@ -685,7 +832,7 @@ class Recorder:
                 self._flush_pool.shutdown(wait=True)
                 self._flush_pool = None
             if comm.rank != 0:
-                comm.barrier()
+                self._finalize_sync(comm)
                 return None
             if self.config.max_epochs_retained is None:
                 streaming.write_merged_trace(
@@ -695,7 +842,7 @@ class Recorder:
             stats = self._stream_totals
             stats.n_records = self.n_records
             stats.n_skipped = self.n_skipped
-            comm.barrier()
+            self._finalize_sync(comm)
             return stats
         self._finalized = True
         if self.config.finalize_topology not in ("tree", "flat"):
@@ -746,6 +893,16 @@ class Recorder:
             )
         comm.barrier()
         return stats
+
+    def _finalize_sync(self, comm: Comm) -> None:
+        """Finalize-time synchronization point.  A plain barrier would
+        wedge survivors forever if a rank died mid-run, so under the
+        degraded protocol it is the timed survivor vote instead (same
+        exit discipline, bounded wait)."""
+        if self._degraded(comm):
+            comm.agree(True, self.config.flush_timeout_s)
+        else:
+            comm.barrier()
 
     def _metadata(self, nranks: int) -> Dict[str, Any]:
         try:

@@ -50,16 +50,18 @@ from __future__ import annotations
 import os
 import shutil
 import warnings
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import trace_format
+from . import faults, trace_format
+from .comm import CommTimeout
 from .interprocess import (CfgResult, MergeResult, RankState,
                            deserialize_rank_state, epoch_occ_counts,
                            make_rank_state, materialize_state,
                            merge_serialized_states, serialize_rank_state)
-from .sequitur import concat_grammars, parse_grammar, terminal_counts
+from .sequitur import Sequitur, concat_grammars, parse_grammar, terminal_counts
 from .specs import FunctionRegistry
 from .timestamps import (BlockedTimestampStore, TimestampStore, TsBlock,
                          compress_timestamps_blocked, pack_ts_blocks,
@@ -167,12 +169,19 @@ def write_epoch_segment(trace_dir: str, epoch: int, *,
                         cfgs: CfgResult,
                         rank_ts_blocks: List[Sequence[TsBlock]],
                         state_blob: bytes, n_records: int,
-                        meta_extra: Optional[Dict[str, Any]] = None
+                        meta_extra: Optional[Dict[str, Any]] = None,
+                        ranks_present: Optional[List[int]] = None
                         ) -> Dict[str, Any]:
     """Commit one epoch segment: write the five-file mini trace plus
     ``state.bin`` under a ``.tmp`` name, atomically rename it in, then
-    atomically rewrite the manifest with the segment's file sizes (the
-    crash-recovery ground truth).  Returns the manifest entry.
+    atomically rewrite the manifest with the segment's file sizes and
+    CRC32 checksums (the crash-recovery and bit-rot ground truth).
+    Returns the manifest entry.
+
+    A failed write (ENOSPC and friends) removes the ``.tmp`` staging
+    directory and raises :class:`trace_format.SegmentWriteError` -- the
+    trace directory is left exactly as it was.  (A hard crash mid-write
+    still leaves ``.tmp`` debris; the next attempt sweeps it.)
 
     A restarted job may reuse the trace directory of a preempted run: the
     committed epoch number always continues past the manifest's newest
@@ -180,6 +189,11 @@ def write_epoch_segment(trace_dir: str, epoch: int, *,
     append after run A's instead of colliding with them, and any stale
     ``merged`` trace (it no longer covers every epoch) is dropped from the
     manifest before the new segment becomes visible.
+
+    ``ranks_present`` marks a *degraded* commit: the sorted ranks whose
+    contributions made it into the epoch.  It is recorded in the manifest
+    entry (and segment metadata) only when partial, so readers can report
+    exactly which ranks' windows are missing.
     """
     os.makedirs(trace_dir, exist_ok=True)
     manifest = _load_or_init_manifest(trace_dir, len(cfgs.cfg_index))
@@ -190,13 +204,31 @@ def write_epoch_segment(trace_dir: str, epoch: int, *,
     tmp = os.path.join(trace_dir, name + ".tmp")
     if os.path.exists(tmp):  # debris from a crashed earlier attempt
         shutil.rmtree(tmp)
-    sizes = trace_format.write_trace(
-        tmp, registry=registry, merged_cst=merge.merged_entries,
-        unique_cfgs=cfgs.unique_cfgs, cfg_index=cfgs.cfg_index,
-        rank_ts_blocks=rank_ts_blocks, meta_extra=meta_extra)
-    with open(os.path.join(tmp, trace_format.STATE_FILE), "wb") as f:
-        f.write(state_blob)
-    sizes[trace_format.STATE_FILE] = len(state_blob)
+    partial = (ranks_present is not None
+               and len(ranks_present) < len(cfgs.cfg_index))
+    if partial:
+        meta_extra = {**(meta_extra or {}),
+                      "ranks_present": list(ranks_present)}
+    try:
+        sizes, crcs = trace_format.write_trace(
+            tmp, registry=registry, merged_cst=merge.merged_entries,
+            unique_cfgs=cfgs.unique_cfgs, cfg_index=cfgs.cfg_index,
+            rank_ts_blocks=rank_ts_blocks, meta_extra=meta_extra,
+            checksums=True)
+        crcs[trace_format.STATE_FILE] = trace_format.write_file(
+            os.path.join(tmp, trace_format.STATE_FILE), state_blob)
+        sizes[trace_format.STATE_FILE] = len(state_blob)
+    except Exception as e:
+        # a clean failure (not a crash): leave no debris behind and report
+        # a typed error -- SimulatedCrash is a BaseException and skips this,
+        # leaving .tmp exactly as a real kill would
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise trace_format.SegmentWriteError(
+            f"failed to write epoch segment {name!r} in {trace_dir!r}: "
+            f"{e}") from e
+    plan = faults.get_active()
+    if plan is not None:
+        plan.on_commit_point("pre-rename", epoch)
     final = os.path.join(trace_dir, name)
     if os.path.exists(final):
         # an orphan not listed in the manifest (e.g. pruned entry whose
@@ -204,8 +236,13 @@ def write_epoch_segment(trace_dir: str, epoch: int, *,
         shutil.rmtree(final)
     os.replace(tmp, final)
     entry = {"name": name, "epoch": epoch, "n_records": n_records,
-             "cst_entries": len(merge.merged_entries), "files": sizes}
+             "cst_entries": len(merge.merged_entries), "files": sizes,
+             "crcs": crcs}
+    if partial:
+        entry["ranks_present"] = list(ranks_present)
     manifest["segments"] = segments + [entry]
+    if plan is not None:
+        plan.on_commit_point("pre-manifest", epoch)
     stale_merged = manifest.pop("merged", None)  # no longer covers all epochs
     trace_format.write_manifest(trace_dir, manifest)
     if stale_merged is not None:
@@ -213,6 +250,8 @@ def write_epoch_segment(trace_dir: str, epoch: int, *,
         # it); now reclaim the stale directory instead of leaking it
         shutil.rmtree(os.path.join(trace_dir, stale_merged["name"]),
                       ignore_errors=True)
+    if plan is not None:
+        plan.on_commit_point("post-commit", epoch)
     return entry
 
 
@@ -232,6 +271,47 @@ def prune_epochs(trace_dir: str, keep: int) -> List[str]:
     for e in drop:
         shutil.rmtree(os.path.join(trace_dir, e["name"]), ignore_errors=True)
     return [e["name"] for e in drop]
+
+
+# ---------------------------------------------------------------------------
+# crash-resume: rebuild rank 0's cumulative state from committed segments
+# ---------------------------------------------------------------------------
+
+
+def resume_cumulative_state(trace_dir: str) -> CumulativeState:
+    """Rebuild the cross-epoch :class:`CumulativeState` of a preempted run
+    by folding the committed segments' ``state.bin`` deltas in epoch order
+    -- the crash-resume path: a restarted job that reuses its trace
+    directory keeps appending epochs AND still gets a clean-finalize
+    ``merged/`` covering the FULL history, instead of permanently losing
+    the incremental-finalize payoff.
+
+    O(sum of delta sizes), state blobs only -- no CST/CFG/timestamp decode.
+    Raises :class:`trace_format.TraceFormatError` when any committed
+    segment is unusable (failed checksum, truncation, missing state): a
+    merged trace must cover every epoch exactly, so the caller falls back
+    to a fresh state (stitched reads still serve the intact segments).
+    """
+    cum = CumulativeState()
+    manifest = trace_format.read_manifest(trace_dir)
+    for entry in manifest.get("segments", []):
+        reason = trace_format.validate_segment(trace_dir, entry)
+        if reason is not None:
+            raise trace_format.TraceFormatError(
+                f"cannot resume cumulative state from {trace_dir!r}: "
+                f"{reason}")
+        path = os.path.join(trace_dir, entry["name"],
+                            trace_format.STATE_FILE)
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+            delta = deserialize_rank_state(blob)
+        except (OSError, ValueError, IndexError) as e:
+            raise trace_format.TraceFormatError(
+                f"cannot resume cumulative state from {trace_dir!r}: "
+                f"{entry['name']}/state.bin is unreadable: {e}") from e
+        cum.append(delta)
+    return cum
 
 
 # ---------------------------------------------------------------------------
@@ -288,6 +368,131 @@ def run_flush(comm, *, entries: List[bytes], cfg: bytes, ticks: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# degraded (fault-tolerant) flush: survivors commit around dead ranks
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FlushOutcome:
+    """What one degraded flush attempt did, from this rank's view.
+
+    ``lost_local`` is the signal the Recorder acts on: this rank's delta
+    did NOT make it into a committed segment (the commit failed, or the
+    commit succeeded without this rank's contribution), so the snapshot
+    must be restored into the live recorder for the next attempt --
+    exactly-once across retries, no loss and no duplication.
+    """
+
+    ok: bool
+    entry: Optional[Dict[str, Any]] = None     # rank 0 only
+    ranks_present: List[int] = field(default_factory=list)
+    error: Optional[str] = None
+    exc: Optional[BaseException] = None        # rank 0 local commit failure
+    lost_local: bool = False
+
+
+def _empty_block_blob(base: int, n: int) -> bytes:
+    """Serialized stand-in for an absent rank block [base, base+n): empty
+    grammar, no groups, one shared empty stream.  Structurally a normal
+    contiguous block, so the tree fold stays full-width and
+    ``merge_rank_states``'s adjacency invariant holds; semantically 'these
+    ranks contributed nothing', which the ``ranks_present`` mask reports."""
+    return serialize_rank_state(RankState(
+        base=base, n=n, groups={},
+        streams=[(Sequitur().serialize(), ())], stream_of=[0] * n))
+
+
+def run_flush_degraded(comm, *, entries: List[bytes], cfg: bytes,
+                       ticks: np.ndarray, registry: FunctionRegistry,
+                       trace_dir: str, epoch: int, cum: CumulativeState,
+                       inter_patterns: bool = True,
+                       ts_block_records: int = 4096,
+                       max_epochs_retained: Optional[int] = None,
+                       meta_extra: Optional[Dict[str, Any]] = None,
+                       timeout_s: float = 30.0) -> FlushOutcome:
+    """One epoch flush that survives unresponsive ranks.
+
+    Same reduction tree and association order as :func:`run_flush` (a
+    fault-free degraded flush commits a byte-identical segment), but built
+    ONLY from tagged point-to-point messages with per-hop timeouts -- no
+    barriers, so a dead rank can never wedge the survivors:
+
+      1. tree-reduce ``(present_ranks, state blob, ts payloads)`` with
+         :meth:`Comm.reduce_tree_partial`; a subtree that misses its
+         timeout is substituted by an explicitly-empty block,
+      2. rank 0 commits the segment, with a ``ranks_present`` mask when
+         partial, and folds the delta into ``cum`` (degraded epochs ARE
+         part of the history the merged trace covers),
+      3. rank 0 fans the verdict out (:meth:`Comm.bcast_p2p`); a rank that
+         is absent from the mask -- it was alive but too slow -- or that
+         never hears a verdict reports ``lost_local`` so its caller
+         restores the snapshot for the next flush.
+
+    Collective-call discipline: all alive ranks must call this (and every
+    other timed collective on ``comm``) in the same order; the message
+    tags assume lockstep invocation counts.
+    """
+    leaf_state = make_rank_state(comm.rank, entries, cfg, registry)
+    blocks = compress_timestamps_blocked(ticks, ts_block_records) \
+        if len(ticks) else []
+    leaf = ((comm.rank,), serialize_rank_state(leaf_state),
+            ((comm.rank, pack_ts_blocks(blocks)),))
+
+    def fold(a, b):
+        return (a[0] + b[0], merge_serialized_states(a[1], b[1]),
+                a[2] + b[2])
+
+    def absent(lo, hi):
+        return ((), _empty_block_blob(lo, hi - lo), ())
+
+    folded = comm.reduce_tree_partial(leaf, fold, absent, timeout_s)
+    if comm.rank != 0:
+        patience = comm.verdict_patience(timeout_s)
+        try:
+            ack = comm.bcast_p2p(None, patience)
+        except CommTimeout:
+            return FlushOutcome(
+                ok=False, lost_local=True,
+                error=f"no commit verdict from rank 0 within {patience:g}s")
+        if ack[0] != "ok":
+            return FlushOutcome(ok=False, lost_local=True, error=ack[1])
+        present = list(ack[1])
+        return FlushOutcome(ok=True, ranks_present=present,
+                            lost_local=comm.rank not in present)
+    present, blob, ts_items = folded
+    present = sorted(present)
+    try:
+        delta = deserialize_rank_state(blob)
+        per_stream = [sum(terminal_counts(parse_grammar(cfg_e)).values())
+                      for cfg_e, _rows in delta.streams]
+        n_records = sum(per_stream[si] for si in delta.stream_of)
+        merge, cfgs = materialize_state(delta, inter_patterns=inter_patterns)
+        rank_blocks: List[List[TsBlock]] = [[] for _ in range(delta.n)]
+        for r, packed in ts_items:
+            rank_blocks[r - delta.base] = unpack_ts_blocks(packed)
+        entry = write_epoch_segment(
+            trace_dir, epoch, registry=registry, merge=merge, cfgs=cfgs,
+            rank_ts_blocks=rank_blocks, state_blob=blob,
+            n_records=n_records, meta_extra=meta_extra,
+            ranks_present=present)
+        if max_epochs_retained is None:
+            cum.append(delta)
+        else:
+            prune_epochs(trace_dir, max_epochs_retained)
+    except Exception as e:
+        # commit failed locally: tell the survivors (one fan-out either
+        # way, preserving the lockstep tag count), then report the failure
+        # with the original exception for the caller to re-raise
+        try:
+            comm.bcast_p2p(("err", f"{type(e).__name__}: {e}"), timeout_s)
+        except Exception:  # pragma: no cover - fan-out itself failing
+            pass
+        return FlushOutcome(ok=False, error=str(e), exc=e, lost_local=True)
+    comm.bcast_p2p(("ok", present), timeout_s)
+    return FlushOutcome(ok=True, entry=entry, ranks_present=present)
+
+
+# ---------------------------------------------------------------------------
 # merged trace at clean exit (the incremental-finalize payoff)
 # ---------------------------------------------------------------------------
 
@@ -319,7 +524,13 @@ def write_merged_trace(trace_dir: str, cum: CumulativeState, *,
         return None
     nranks = cum.n
     rank_blocks: List[List[TsBlock]] = [[] for _ in range(nranks)]
+    # per rank, per source segment: [n_blocks, that segment's wrap base] --
+    # readers unwrap each epoch's blocks against its OWN base, so
+    # inter-epoch gaps of >= 2 whole wrap periods (undetectable from tick
+    # values) stay exact in merged mode, matching stitched mode
+    wrap_spans: List[List[List[int]]] = [[] for _ in range(nranks)]
     base_wraps: Optional[int] = None
+    degraded_epochs: Dict[str, List[int]] = {}
     for entry in entries:
         # only each segment's timestamp payload is needed here -- the
         # CST/CFG already live merged inside `cum` -- so skip the full
@@ -333,33 +544,40 @@ def write_merged_trace(trace_dir: str, cum: CumulativeState, *,
         if index is None:  # legacy single-blob segment: not block-indexed
             skip(f"{entry['name']} has no block-indexed timestamps")
             return None
+        seg_wraps = int(seg_meta.get("tick_wraps", 0) or 0)
         if base_wraps is None:
-            # the merged trace spans every epoch, so its wrap base is the
-            # FIRST epoch's; later epochs' wraps are recovered by the
-            # reader's intra-array drop detection (exact as long as no
-            # inter-epoch gap silently spans >= 2 full wrap periods --
-            # stitched mode, which keeps per-segment bases, has no such
-            # limit)
-            base_wraps = int(seg_meta.get("tick_wraps", 0) or 0)
+            # the merged trace's store-wide base stays the FIRST epoch's
+            # (back-compat for readers unaware of tick_wrap_spans)
+            base_wraps = seg_wraps
+        if "ranks_present" in entry:
+            degraded_epochs[entry["name"]] = list(entry["ranks_present"])
         for r in range(min(nranks, len(index))):
             rank_blocks[r].extend(
                 (raw[e[0] : e[0] + e[1]], e[2], e[3], e[4],
                  e[5] if len(e) > 5 else None)
                 for e in index[r])
+            wrap_spans[r].append([len(index[r]), seg_wraps])
     state = cum.to_rank_state()
     merge, cfgs = materialize_state(state, inter_patterns=inter_patterns)
     tmp = os.path.join(trace_dir, MERGED_DIR + ".tmp")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
+    meta_extra = dict(meta_extra or {})
     if base_wraps:
-        meta_extra = {**(meta_extra or {}), "tick_wraps": base_wraps}
-    sizes = trace_format.write_trace(
+        meta_extra["tick_wraps"] = base_wraps
+    if any(len(spans) > 1 or (spans and spans[0][1])
+           for spans in wrap_spans):
+        meta_extra["tick_wrap_spans"] = wrap_spans
+    if degraded_epochs:
+        meta_extra["degraded_epochs"] = degraded_epochs
+    sizes, crcs = trace_format.write_trace(
         tmp, registry=registry, merged_cst=merge.merged_entries,
         unique_cfgs=cfgs.unique_cfgs, cfg_index=cfgs.cfg_index,
-        rank_ts_blocks=rank_blocks, meta_extra=meta_extra)
+        rank_ts_blocks=rank_blocks, meta_extra=meta_extra or None,
+        checksums=True)
     state_blob = serialize_rank_state(state)
-    with open(os.path.join(tmp, trace_format.STATE_FILE), "wb") as f:
-        f.write(state_blob)
+    crcs[trace_format.STATE_FILE] = trace_format.write_file(
+        os.path.join(tmp, trace_format.STATE_FILE), state_blob)
     sizes[trace_format.STATE_FILE] = len(state_blob)
     final = os.path.join(trace_dir, MERGED_DIR)
     manifest = trace_format.read_manifest(trace_dir)
@@ -371,7 +589,8 @@ def write_merged_trace(trace_dir: str, cum: CumulativeState, *,
             trace_format.write_manifest(trace_dir, manifest)
         shutil.rmtree(final)
     os.replace(tmp, final)
-    entry = {"name": MERGED_DIR, "n_epochs": cum.n_epochs, "files": sizes}
+    entry = {"name": MERGED_DIR, "n_epochs": cum.n_epochs, "files": sizes,
+             "crcs": crcs}
     manifest["merged"] = entry
     trace_format.write_manifest(trace_dir, manifest)
     return entry
@@ -440,8 +659,9 @@ def make_ts_store(data: Dict[str, Any]):
     already wrapped when the epoch began) seeds the unwrap base."""
     wraps = int(data["meta"].get("tick_wraps", 0) or 0)
     if data.get("ts_index") is not None:
-        return BlockedTimestampStore(data["ts_raw"], data["ts_index"],
-                                     tick_wraps=wraps)
+        return BlockedTimestampStore(
+            data["ts_raw"], data["ts_index"], tick_wraps=wraps,
+            wrap_spans=data["meta"].get("tick_wrap_spans"))
     return TimestampStore(data["rank_timestamps"], tick_wraps=wraps)
 
 

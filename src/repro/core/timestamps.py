@@ -308,11 +308,19 @@ class BlockedTimestampStore(TimestampStore):
     decompress only intersecting blocks."""
 
     def __init__(self, raw: bytes, index: Sequence[Sequence[Sequence[int]]],
-                 tick_wraps: int = 0):
+                 tick_wraps: int = 0,
+                 wrap_spans: Optional[Sequence[Sequence[Sequence[int]]]]
+                 = None):
         self._raw = raw
         self._index = index
         self.blocks_touched = 0
         self.tick_wraps = tick_wraps
+        # merged multi-epoch traces: per rank a list of [n_blocks, wraps]
+        # spans -- each source segment's block count with ITS OWN wrap
+        # base, so unwrapping stays exact even when consecutive epochs are
+        # separated by >= 2 whole wrap periods (undetectable from the tick
+        # values alone; see write_merged_trace)
+        self._wrap_spans = wrap_spans
 
     def n_blocks(self, rank: int) -> int:
         return len(self._index[rank]) if rank < len(self._index) else 0
@@ -337,6 +345,31 @@ class BlockedTimestampStore(TimestampStore):
         if rank >= len(self._index):
             return None
         return self._decompress(self._index[rank])
+
+    def load_unwrapped(self, rank: int) -> Optional[np.ndarray]:
+        """Monotonic int64 ticks; with per-segment ``wrap_spans`` each
+        source epoch's blocks unwrap against that epoch's own recorded
+        base (exact across arbitrary inter-epoch gaps), otherwise the
+        store-wide base plus intra-array drop detection."""
+        spans = self._wrap_spans[rank] \
+            if self._wrap_spans is not None and rank < len(self._wrap_spans) \
+            else None
+        if not spans:
+            return super().load_unwrapped(rank)
+        entries = self._index[rank] if rank < len(self._index) else []
+        parts: List[np.ndarray] = []
+        i = 0
+        for n_blocks, base in spans:
+            sub = entries[i : i + n_blocks]
+            i += n_blocks
+            if sub:
+                parts.append(unwrap_ticks(self._decompress(sub), int(base)))
+        if i < len(entries):  # spans out of step with the index: fall back
+            tail = self._decompress(entries[i:])
+            parts.append(unwrap_ticks(tail, int(spans[-1][1])))
+        if not parts:
+            return None
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
 
     def window(self, rank: int, t0: int, t1: int) -> Optional[np.ndarray]:
         if rank >= len(self._index):

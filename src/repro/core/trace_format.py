@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import json
 import os
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .encoding import (encode_signature, pack_uvarints, read_uvarint,
@@ -46,6 +47,14 @@ class TraceFormatError(Exception):
     or a format_version this reader does not understand."""
 
 
+class SegmentWriteError(OSError):
+    """An epoch segment could not be written (ENOSPC, a vanished trace
+    directory, ...).  The ``.tmp`` staging directory has been cleaned up
+    and nothing was committed -- the trace directory is exactly as it was
+    before the attempt.  Subclasses OSError so callers treating flush
+    failures as I/O errors keep working."""
+
+
 _TRACE_FILES = ("metadata.json", "merged_cst.bin", "unique_cfgs.bin",
                 "cfg_index.bin", "timestamps.bin")
 
@@ -58,14 +67,29 @@ def segment_name(epoch: int) -> str:
     return f"{SEGMENT_PREFIX}{epoch:05d}"
 
 
-def _write_blob_list(path: str, blobs: List[bytes]) -> None:
+def _blob_list_bytes(blobs: List[bytes]) -> bytes:
     out = bytearray()
     write_uvarint(out, len(blobs))
     for b in blobs:
         write_uvarint(out, len(b))
         out.extend(b)
+    return bytes(out)
+
+
+def write_file(path: str, data: bytes) -> int:
+    """Write one trace file (through the fault-injection hook) and return
+    the CRC32 of the INTENDED bytes.  Under an injected torn write the
+    disk receives different bytes than the checksum records -- exactly the
+    lying-disk case :func:`validate_segment` must catch, so the checksum
+    is deliberately computed from the intent, not from what hit the
+    platter."""
+    from . import faults
+
+    plan = faults.get_active()
+    to_disk = data if plan is None else plan.on_write(path, data)
     with open(path, "wb") as f:
-        f.write(bytes(out))
+        f.write(to_disk)
+    return zlib.crc32(data) & 0xFFFFFFFF
 
 
 def _read_blob_list(path: str) -> List[bytes]:
@@ -86,8 +110,12 @@ def write_trace(trace_dir: str, *, registry: FunctionRegistry,
                 cfg_index: List[int],
                 rank_timestamps: Optional[List[bytes]] = None,
                 rank_ts_blocks: Optional[List[Sequence[TsBlock]]] = None,
-                meta_extra: Optional[Dict[str, Any]] = None) -> Dict[str, int]:
-    """Write the trace directory; returns per-file sizes in bytes.
+                meta_extra: Optional[Dict[str, Any]] = None,
+                checksums: bool = False) -> Any:
+    """Write the trace directory; returns per-file sizes in bytes, or
+    ``(sizes, crcs)`` when ``checksums`` is set (per-file CRC32s of the
+    written bytes -- the streaming writer records them in the manifest so
+    post-commit bit rot and torn writes are detected, not parsed).
 
     Timestamps are passed either as ``rank_timestamps`` (legacy: one zlib
     blob per rank, indexed by ``ts_offsets``) or ``rank_ts_blocks``
@@ -102,33 +130,32 @@ def write_trace(trace_dir: str, *, registry: FunctionRegistry,
         raise ValueError(
             "pass exactly one of rank_timestamps / rank_ts_blocks")
     os.makedirs(trace_dir, exist_ok=True)
-    _write_blob_list(os.path.join(trace_dir, "merged_cst.bin"), merged_cst)
-    _write_blob_list(os.path.join(trace_dir, "unique_cfgs.bin"), unique_cfgs)
-    with open(os.path.join(trace_dir, "cfg_index.bin"), "wb") as f:
-        f.write(pack_uvarints(cfg_index))
+    files: Dict[str, bytes] = {
+        "merged_cst.bin": _blob_list_bytes(merged_cst),
+        "unique_cfgs.bin": _blob_list_bytes(unique_cfgs),
+        "cfg_index.bin": pack_uvarints(cfg_index),
+    }
     ts_meta: Dict[str, Any] = {}
-    off = 0
-    with open(os.path.join(trace_dir, "timestamps.bin"), "wb") as f:
-        if rank_timestamps is not None:
-            ts_offsets = []
-            for blob in rank_timestamps:
-                ts_offsets.append([off, len(blob)])
-                f.write(blob)
-                off += len(blob)
-            ts_meta["ts_offsets"] = ts_offsets
-        else:
-            ts_index = []
-            for blocks in rank_ts_blocks:
-                entries = []
-                for blob, n, t_min, t_max, n_bytes in blocks:
-                    e = [off, len(blob), n, t_min, t_max]
-                    if n_bytes is not None:
-                        e.append(n_bytes)
-                    entries.append(e)
-                    f.write(blob)
-                    off += len(blob)
-                ts_index.append(entries)
-            ts_meta["ts_index"] = ts_index
+    ts_buf = bytearray()
+    if rank_timestamps is not None:
+        ts_offsets = []
+        for blob in rank_timestamps:
+            ts_offsets.append([len(ts_buf), len(blob)])
+            ts_buf.extend(blob)
+        ts_meta["ts_offsets"] = ts_offsets
+    else:
+        ts_index = []
+        for blocks in rank_ts_blocks:
+            entries = []
+            for blob, n, t_min, t_max, n_bytes in blocks:
+                e = [len(ts_buf), len(blob), n, t_min, t_max]
+                if n_bytes is not None:
+                    e.append(n_bytes)
+                entries.append(e)
+                ts_buf.extend(blob)
+            ts_index.append(entries)
+        ts_meta["ts_index"] = ts_index
+    files["timestamps.bin"] = bytes(ts_buf)
     meta = {
         "format_version": FORMAT_VERSION,
         "functions": {str(i): {
@@ -143,13 +170,13 @@ def write_trace(trace_dir: str, *, registry: FunctionRegistry,
     }
     if meta_extra:
         meta.update(meta_extra)
-    with open(os.path.join(trace_dir, "metadata.json"), "w") as f:
-        json.dump(meta, f)
-    sizes = {}
-    for name in ("merged_cst.bin", "unique_cfgs.bin", "cfg_index.bin",
-                 "timestamps.bin", "metadata.json"):
-        sizes[name] = os.path.getsize(os.path.join(trace_dir, name))
-    return sizes
+    files["metadata.json"] = json.dumps(meta).encode("utf-8")
+    sizes: Dict[str, int] = {}
+    crcs: Dict[str, int] = {}
+    for name, data in files.items():
+        crcs[name] = write_file(os.path.join(trace_dir, name), data)
+        sizes[name] = len(data)
+    return (sizes, crcs) if checksums else sizes
 
 
 def read_trace_files(trace_dir: str) -> Dict[str, Any]:
@@ -283,7 +310,9 @@ def validate_segment(trace_dir: str, entry: Dict[str, Any]) -> Optional[str]:
 
     The manifest records every file's byte size at commit time, so a
     truncated (or grown) file -- the post-commit crash case -- is caught
-    before any decode is attempted.
+    before any decode is attempted; the per-file CRC32s (``crcs``, written
+    by the streaming commit path) additionally catch same-size damage --
+    bit rot and torn writes -- that no size check can see.
     """
     seg_dir = os.path.join(trace_dir, entry["name"])
     if not os.path.isdir(seg_dir):
@@ -296,6 +325,19 @@ def validate_segment(trace_dir: str, entry: Dict[str, Any]) -> Optional[str]:
         if got != want:
             return (f"{entry['name']}/{fname} is {got} bytes, manifest "
                     f"recorded {want} (truncated or corrupt)")
+    for fname, want in entry.get("crcs", {}).items():
+        path = os.path.join(seg_dir, fname)
+        try:
+            crc = 0
+            with open(path, "rb") as f:
+                for chunk in iter(lambda: f.read(1 << 20), b""):
+                    crc = zlib.crc32(chunk, crc)
+        except OSError as e:
+            return f"{entry['name']}/{fname} is unreadable: {e}"
+        if crc & 0xFFFFFFFF != want:
+            return (f"{entry['name']}/{fname} fails its checksum (crc32 "
+                    f"{crc & 0xFFFFFFFF:#010x}, manifest recorded "
+                    f"{want:#010x}: bit rot or torn write)")
     return None
 
 

@@ -38,6 +38,7 @@ per-rank walk.
 from __future__ import annotations
 
 import heapq
+import warnings
 from collections import defaultdict
 from itertools import repeat
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
@@ -156,6 +157,15 @@ class TraceView:
     """
 
     def __init__(self, reader) -> None:
+        if getattr(reader, "degraded", False):
+            cov = reader.coverage()
+            warnings.warn(
+                f"trace has PARTIAL coverage: "
+                f"{len(cov['degraded_epochs'])} degraded epoch(s) "
+                f"(ranks with gapped streams: {cov['ranks_partial']}), "
+                f"{len(cov['skipped'])} skipped segment(s) -- analyses "
+                f"are exact over the records present but do not cover "
+                f"the full job history", RuntimeWarning, stacklevel=3)
         self.reader = reader
         self.nranks: int = reader.nranks
         self.functions: Dict[int, Dict[str, Any]] = reader.functions

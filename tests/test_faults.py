@@ -1,0 +1,554 @@
+"""Fault-tolerance suite: deterministic fault injection into the comm
+layer and the segment writer, and the properties it must uphold --
+
+  * a failed or crashed epoch commit retains the delta; the next flush
+    covers the failed epoch's records exactly once (sync AND async),
+  * a dead/unresponsive rank degrades the epoch (survivors commit with a
+    ``ranks_present`` mask) instead of deadlocking the world,
+  * in-flight torn writes and post-commit bit rot are caught by the
+    manifest CRC32s, quarantined and reported,
+  * a killed-and-restarted run resumes its cumulative state and
+    finalizes a merged trace value-identical to an uninterrupted run,
+  * every surviving trace directory is fully readable or reports
+    degraded coverage -- never silently wrong.
+"""
+
+import os
+import random
+import time
+
+import pytest
+
+from repro.core import faults, streaming, trace_format
+from repro.core.comm import run_thread_world
+from repro.core.faults import FaultPlan, SimulatedCrash
+from repro.core.reader import TraceReader
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+from repro.core.trace_format import SegmentWriteError, TraceFormatError
+import repro.core.apis  # noqa: F401  (populate registry)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.uninstall()
+
+
+def _gen_calls(rng: random.Random, n_calls: int, rank: int, nranks: int):
+    fids = {name: REGISTRY.id_of(name)
+            for name in ("open", "close", "pwrite", "lseek", "write")}
+    calls = [(fids["open"], ("/data/f.bin", 2, 438), f"fd-{rank}")]
+    fd = f"fd-{rank}"
+    for i in range(n_calls):
+        kind = rng.random()
+        if kind < 0.6:
+            off = rank * 4096 + i * nranks * 4096
+            calls.append((fids["pwrite"], (fd, b"x" * 4096, off), 4096))
+        elif kind < 0.8:
+            calls.append((fids["lseek"], (fd, rank * 256 + i * 256, 0),
+                          rank * 256 + i * 256))
+        else:
+            calls.append((fids["write"], (fd, b"z" * 128), 128))
+    calls.append((fids["close"], (fd,), 0))
+    return calls
+
+
+def _feed(rec: Recorder, calls, tick_start: int = 0) -> int:
+    t = tick_start
+    for fid, args, ret in calls:
+        rec.record(fid, args, ret, 0, t, t + 1)
+        t += 2
+    return t
+
+
+def _funcs(reader: TraceReader):
+    return [r.func for _, r in reader.all_records()]
+
+
+def _names(calls):
+    return [REGISTRY.spec(fid).name for fid, _, _ in calls]
+
+
+# ---------------------------------------------------------------------------
+# the plan itself: seeded, replayable, counted
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic():
+    decisions = []
+    for _ in range(2):
+        plan = FaultPlan(seed=123, drop_prob=0.3, delay_prob=0.3,
+                         delay_s=0.01)
+        decisions.append([plan.on_send(0, 1) for _ in range(200)])
+    assert decisions[0] == decisions[1]
+    assert "drop" in decisions[0] and 0.01 in decisions[0]
+
+
+def test_torn_write_mangles_only_the_named_file(tmp_path):
+    plan = FaultPlan(torn_file="b.bin")
+    out = plan.on_write(str(tmp_path / "a.bin"), b"\xff" * 64)
+    assert out == b"\xff" * 64
+    out = plan.on_write(str(tmp_path / "b.bin"), b"\xff" * 64)
+    assert len(out) == 64 and out != b"\xff" * 64  # same size, wrong bytes
+    assert plan.counters["files_torn"] == 1
+
+
+# ---------------------------------------------------------------------------
+# failed commit -> delta retained -> exactly-once on retry (satellite c)
+# ---------------------------------------------------------------------------
+
+
+def test_enospc_flush_retains_delta_sync(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(1), 28, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    t = _feed(rec, calls[10:20], t)
+    with faults.injected(FaultPlan(fail_write_at=1)) as plan:
+        with pytest.raises(OSError, match="disk full") as ei:
+            rec.flush()
+    assert isinstance(ei.value, SegmentWriteError)
+    assert plan.counters["writes_failed"] == 1
+    # clean failure: no .tmp debris, nothing committed, delta restored
+    assert not [d for d in os.listdir(sd) if d.endswith(".tmp")]
+    assert len(trace_format.read_manifest(sd)["segments"]) == 1
+    assert rec.epochs_restored == 1
+    _feed(rec, calls[20:], t)
+    rec.finalize()
+    for mode in ("stitched", "merged"):
+        assert _funcs(TraceReader(sd, mode=mode)) == _names(calls)
+
+
+def test_enospc_async_flush_retains_delta(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(2), 28, 0, 1)
+    rec = Recorder(rank=0,
+                   config=RecorderConfig(trace_dir=sd, async_flush=True))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    rec.drain()
+    t = _feed(rec, calls[10:20], t)
+    with faults.injected(FaultPlan(fail_write_at=1)):
+        rec.flush()
+        with pytest.raises(RuntimeError, match="records were retained"):
+            rec.drain()
+    assert rec.epochs_restored == 1
+    _feed(rec, calls[20:], t)
+    rec.finalize()
+    for mode in ("stitched", "merged"):
+        assert _funcs(TraceReader(sd, mode=mode)) == _names(calls)
+
+
+def test_crash_pre_rename_leaves_tmp_debris_and_retains_delta(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(3), 28, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    t = _feed(rec, calls[10:20], t)
+    with faults.injected(FaultPlan(crash_point="pre-rename")):
+        with pytest.raises(SimulatedCrash):
+            rec.flush()
+    # a kill mid-write leaves .tmp debris -- invisible to readers, swept
+    # by the next attempt
+    assert [d for d in os.listdir(sd) if d.endswith(".tmp")]
+    reader = TraceReader(sd, mode="stitched")
+    assert reader.skipped == []
+    assert _funcs(reader) == _names(calls[:10])
+    assert rec.epochs_restored == 1
+    _feed(rec, calls[20:], t)
+    rec.finalize()
+    assert not [d for d in os.listdir(sd) if d.endswith(".tmp")]
+    for mode in ("stitched", "merged"):
+        assert _funcs(TraceReader(sd, mode=mode)) == _names(calls)
+
+
+def test_crash_pre_manifest_orphan_segment_is_replaced(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(4), 28, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    t = _feed(rec, calls[10:20], t)
+    with faults.injected(FaultPlan(crash_point="pre-manifest")):
+        with pytest.raises(SimulatedCrash):
+            rec.flush()
+    # the segment directory was renamed in but never listed: an orphan no
+    # reader serves, so the restored delta cannot be double-counted
+    orphan = os.path.join(sd, trace_format.segment_name(1))
+    assert os.path.isdir(orphan)
+    assert len(trace_format.read_manifest(sd)["segments"]) == 1
+    assert _funcs(TraceReader(sd, mode="stitched")) == _names(calls[:10])
+    _feed(rec, calls[20:], t)
+    rec.finalize()  # the retry overwrites the orphan
+    for mode in ("stitched", "merged"):
+        assert _funcs(TraceReader(sd, mode=mode)) == _names(calls)
+
+
+# ---------------------------------------------------------------------------
+# integrity: checksummed segments catch torn writes and bit rot
+# ---------------------------------------------------------------------------
+
+
+def test_in_flight_torn_write_caught_by_checksum(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(5), 20, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    t = _feed(rec, calls[10:], t)
+    with faults.injected(FaultPlan(torn_file="merged_cst.bin")) as plan:
+        rec.flush()  # the writer believes the write succeeded
+    assert plan.counters["files_torn"] == 1
+    manifest = trace_format.read_manifest(sd)
+    entry = manifest["segments"][1]
+    reason = trace_format.validate_segment(sd, entry)
+    assert reason is not None and "checksum" in reason
+    # size checks alone cannot see it: the torn file has the right length
+    path = os.path.join(sd, entry["name"], "merged_cst.bin")
+    assert os.path.getsize(path) == entry["files"]["merged_cst.bin"]
+    # stitched: quarantined + reported; tail: falls back to the intact one
+    reader = TraceReader(sd, mode="stitched")
+    assert [s["segment"] for s in reader.skipped] == [entry["name"]]
+    assert reader.degraded
+    assert _funcs(reader) == _names(calls[:10])
+    tail = TraceReader(sd, mode="tail")
+    assert [s["segment"] for s in tail.skipped] == [entry["name"]]
+    assert _funcs(tail) == _names(calls[:10])
+
+
+def test_post_commit_bit_rot_caught_by_checksum(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(6), 20, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    _feed(rec, calls[10:], t)
+    rec.flush()
+    rec.finalize()
+    seg = trace_format.segment_name(0)
+    faults.corrupt_file(os.path.join(sd, seg, "unique_cfgs.bin"), seed=9)
+    reason = trace_format.validate_segment(
+        sd, trace_format.read_manifest(sd)["segments"][0])
+    assert reason is not None and "checksum" in reason
+    reader = TraceReader(sd, mode="stitched")
+    assert [s["segment"] for s in reader.skipped] == [seg]
+    assert _funcs(reader) == _names(calls[10:])
+    # the merged trace was written from in-memory state before the rot:
+    # auto mode still serves the complete history
+    assert _funcs(TraceReader(sd, mode="auto")) == _names(calls)
+
+
+def test_torn_tail_caught_by_size_check(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(7), 20, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    _feed(rec, calls[10:], t)
+    rec.flush()
+    seg = trace_format.segment_name(1)
+    faults.tear_file(os.path.join(sd, seg, "timestamps.bin"))
+    reader = TraceReader(sd, mode="stitched")
+    assert [s["segment"] for s in reader.skipped] == [seg]
+    assert _funcs(reader) == _names(calls[:10])
+
+
+# ---------------------------------------------------------------------------
+# degraded collectives: survivor votes and partial commits
+# ---------------------------------------------------------------------------
+
+
+def test_agree_without_timeout_is_vote_any_with_full_presence():
+    def worker(comm, rank):
+        return comm.agree(rank == 1)
+
+    for verdict, present in run_thread_world(3, worker):
+        assert (verdict, present) == (True, frozenset({0, 1, 2}))
+
+
+def test_agree_survivor_vote_excludes_unresponsive_subtree():
+    faults.install(FaultPlan(dead_ranks=(2,)))
+
+    def worker(comm, rank):
+        return comm.agree(rank == 1, timeout=0.5)
+
+    res = run_thread_world(4, worker)
+    # rank 2 owns the [2, 4) subtree hop: its silence absorbs rank 3's
+    # vote too, but every rank still hears the survivors' verdict
+    for verdict, present in res:
+        assert (verdict, present) == (True, frozenset({0, 1}))
+
+
+def test_agree_verdictless_rank_falls_back_to_its_own_flag():
+    faults.install(FaultPlan(dead_ranks=(0,)))
+
+    def worker(comm, rank):
+        return comm.agree(rank == 1, timeout=0.4)
+
+    res = run_thread_world(2, worker)
+    # rank 0 hears everyone (its inbound links are fine) but its verdict
+    # fan-out is dropped; rank 1 times out and self-reports
+    assert res[0] == (True, frozenset({0, 1}))
+    assert res[1] == (True, frozenset({1}))
+
+
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")
+@pytest.mark.parametrize("dead,mask", [(1, [0, 2, 3]), (2, [0, 1])])
+def test_degraded_flush_survives_unresponsive_rank(tmp_path, dead, mask):
+    """One rank goes mute mid-run: the survivors commit a degraded epoch
+    with a ``ranks_present`` mask (never deadlock), the lost ranks retain
+    their deltas, and after the rank recovers the next flush covers every
+    record exactly once.  ``dead=2`` is the interior-node case: rank 3's
+    subtree is absorbed by the silence, so BOTH 2 and 3 retry."""
+    sd = str(tmp_path / "s")
+    nranks = 4
+    first = [_gen_calls(random.Random(40 + r), 8, r, nranks)
+             for r in range(nranks)]
+    extra = [_gen_calls(random.Random(50 + r), 5, r, nranks)
+             for r in range(nranks)]
+    faults.install(FaultPlan(dead_ranks=(dead,)))
+
+    def worker(comm, rank):
+        rec = Recorder(rank=rank, config=RecorderConfig(
+            trace_dir=sd, flush_timeout_s=2.0))
+        t = _feed(rec, first[rank])
+        rec.flush(comm)
+        comm.barrier()
+        if rank == 0:
+            faults.uninstall()  # the mute rank recovers
+        comm.barrier()
+        t = _feed(rec, extra[rank], t)
+        rec.flush(comm)
+        rec.finalize(comm)
+        return (rec.epochs_restored, rec.epochs_degraded,
+                rec.last_flush_outcome.lost_local)
+
+    res = run_thread_world(nranks, worker)
+    lost = sorted(set(range(nranks)) - set(mask))
+    for r in range(nranks):
+        assert res[r][0] == (1 if r in lost else 0)
+    assert res[0][1] == 1  # rank 0 counted one degraded epoch
+    assert not any(r[2] for r in res)  # final flush included everyone
+    entry0 = trace_format.read_manifest(sd)["segments"][0]
+    assert entry0["ranks_present"] == mask
+    reader = TraceReader(sd, mode="stitched")
+    assert reader.degraded
+    assert reader.degraded_epochs == {entry0["name"]: mask}
+    assert reader.ranks_partial == lost
+    cov = reader.coverage()
+    assert cov["complete"] is False and cov["ranks_partial"] == lost
+    # exactly-once per rank: lost ranks' first-batch records rode epoch 1
+    for r in range(nranks):
+        got = [rec.func for rec in reader.iter_records(r)]
+        assert got == _names(first[r] + extra[r])
+    # the merged trace (written from the cumulative state) agrees, and
+    # carries the degraded map in its metadata
+    merged = TraceReader(sd, mode="merged")
+    assert merged.degraded_epochs == {entry0["name"]: mask}
+    for r in range(nranks):
+        got = [rec.func for rec in merged.iter_records(r)]
+        assert got == _names(first[r] + extra[r])
+    with pytest.warns(RuntimeWarning, match="PARTIAL coverage"):
+        TraceReader(sd, mode="stitched").view()
+
+
+def test_degraded_protocol_matches_sync_flush_byte_for_byte(tmp_path):
+    """A fault-free degraded flush must commit byte-identical segments to
+    the plain barrier-based flush (same tree, same association order) --
+    the CRC columns of the manifests are a byte-level witness."""
+    def drive(sd, timeout):
+        calls = [_gen_calls(random.Random(60 + r), 10, r, 2)
+                 for r in range(2)]
+
+        def worker(comm, rank):
+            rec = Recorder(rank=rank, config=RecorderConfig(
+                trace_dir=sd, flush_timeout_s=timeout))
+            t = _feed(rec, calls[rank][:6])
+            rec.flush(comm)
+            _feed(rec, calls[rank][6:], t)
+            rec.flush(comm)
+            return rec.finalize(comm)
+
+        run_thread_world(2, worker)
+
+    sd_sync = str(tmp_path / "sync")
+    sd_deg = str(tmp_path / "deg")
+    drive(sd_sync, None)
+    drive(sd_deg, 5.0)
+    m_sync = trace_format.read_manifest(sd_sync)
+    m_deg = trace_format.read_manifest(sd_deg)
+    assert [e["crcs"] for e in m_sync["segments"]] == \
+        [e["crcs"] for e in m_deg["segments"]]
+    assert "ranks_present" not in m_deg["segments"][0]
+    assert m_sync["merged"]["crcs"] == m_deg["merged"]["crcs"]
+
+
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")
+def test_delayed_messages_within_timeout_do_not_degrade(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = [_gen_calls(random.Random(70 + r), 10, r, 2) for r in range(2)]
+    faults.install(FaultPlan(delay_prob=1.0, delay_s=0.05))
+
+    def worker(comm, rank):
+        rec = Recorder(rank=rank, config=RecorderConfig(
+            trace_dir=sd, flush_timeout_s=5.0))
+        t = _feed(rec, calls[rank][:6])
+        rec.flush(comm)
+        _feed(rec, calls[rank][6:], t)
+        rec.flush(comm)
+        rec.finalize(comm)
+        return rec.epochs_degraded + rec.epochs_restored
+
+    res = run_thread_world(2, worker)
+    faults.uninstall()
+    assert res == [0, 0]
+    reader = TraceReader(sd, mode="stitched")
+    assert not reader.degraded
+    for r in range(2):
+        assert [rec.func for rec in reader.iter_records(r)] == \
+            _names(calls[r])
+
+
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")
+def test_stale_stragglers_from_degraded_epoch_are_discarded(tmp_path):
+    """Messages that arrive AFTER their collective timed out must not be
+    mistaken for the next collective's traffic: the epoch they belonged
+    to is committed degraded, the stragglers are discarded by tag, and
+    the next flush is clean and complete."""
+    sd = str(tmp_path / "s")
+    calls = [_gen_calls(random.Random(80 + r), 8, r, 2) for r in range(2)]
+    extra = [_gen_calls(random.Random(90 + r), 5, r, 2) for r in range(2)]
+    # every message delivered 1s late, but the protocol only waits 0.25s:
+    # epoch 0 degrades to rank 0 alone and the late messages become
+    # queued stragglers for epoch 1 to step over
+    faults.install(FaultPlan(delay_prob=1.0, delay_s=1.0))
+
+    def worker(comm, rank):
+        rec = Recorder(rank=rank, config=RecorderConfig(
+            trace_dir=sd, flush_timeout_s=0.25))
+        t = _feed(rec, calls[rank])
+        rec.flush(comm)
+        comm.barrier()
+        if rank == 0:
+            faults.uninstall()
+        comm.barrier()
+        time.sleep(1.2)  # let the stragglers land in the queues
+        t = _feed(rec, extra[rank], t)
+        rec.flush(comm)
+        rec.finalize(comm)
+        return rec.epochs_restored
+
+    res = run_thread_world(2, worker)
+    assert res == [0, 1]
+    entry0 = trace_format.read_manifest(sd)["segments"][0]
+    assert entry0["ranks_present"] == [0]
+    reader = TraceReader(sd, mode="stitched")
+    assert reader.ranks_partial == [1]
+    for r in range(2):
+        assert [rec.func for rec in reader.iter_records(r)] == \
+            _names(calls[r] + extra[r])
+
+
+# ---------------------------------------------------------------------------
+# crash-resume (tentpole part 1 + satellite d)
+# ---------------------------------------------------------------------------
+
+
+def test_resume_cumulative_state_folds_committed_segments(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(10), 20, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    _feed(rec, calls[10:], t)
+    rec.flush()
+    cum = streaming.resume_cumulative_state(sd)
+    assert cum.n_epochs == 2
+    from repro.core.interprocess import serialize_rank_state
+    assert serialize_rank_state(cum.to_rank_state()) == \
+        serialize_rank_state(rec._cum.to_rank_state())
+    # any unusable segment is a hard error: a merged trace must cover
+    # every epoch exactly, so resume refuses rather than under-covers
+    faults.corrupt_file(
+        os.path.join(sd, trace_format.segment_name(0), "state.bin"), seed=3)
+    with pytest.raises(TraceFormatError, match="cannot resume"):
+        streaming.resume_cumulative_state(sd)
+
+
+def test_resumed_run_merged_identical_to_uninterrupted(tmp_path):
+    """Run A is killed after 2 committed epochs (no finalize); run B
+    reuses the directory, records the remaining calls and finalizes.
+    The merged trace must be value-identical to one uninterrupted run
+    flushing at the same boundaries."""
+    calls = _gen_calls(random.Random(11), 28, 0, 1)
+
+    sd_clean = str(tmp_path / "clean")
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd_clean))
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    t = _feed(rec, calls[10:20], t)
+    rec.flush()
+    t = _feed(rec, calls[20:], t)
+    rec.flush()
+    rec.finalize()
+
+    sd_res = str(tmp_path / "resumed")
+    rec_a = Recorder(rank=0, config=RecorderConfig(trace_dir=sd_res))
+    t = _feed(rec_a, calls[:10])
+    rec_a.flush()
+    t = _feed(rec_a, calls[10:20], t)
+    rec_a.flush()
+    del rec_a  # killed: no finalize, no merged trace
+    assert "merged" not in trace_format.read_manifest(sd_res)
+    rec_b = Recorder(rank=0, config=RecorderConfig(trace_dir=sd_res))
+    t = _feed(rec_b, calls[20:], t)
+    rec_b.flush()
+    assert rec_b.epochs_resumed == 2
+    rec_b.finalize()
+
+    assert "merged" in trace_format.read_manifest(sd_res)
+    ra = TraceReader(sd_clean, mode="merged")
+    rb = TraceReader(sd_res, mode="merged")
+    rows_a = [(r.func, r.args, r.ret, r.t_entry, r.t_exit)
+              for _, r in ra.all_records()]
+    rows_b = [(r.func, r.args, r.ret, r.t_entry, r.t_exit)
+              for _, r in rb.all_records()]
+    assert rows_a == rows_b
+
+
+# ---------------------------------------------------------------------------
+# the umbrella invariant: readable or reported -- never silently wrong
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plan_kw", [
+    dict(fail_write_at=1),
+    dict(fail_write_at=4),
+    dict(crash_point="pre-rename"),
+    dict(crash_point="pre-manifest"),
+    dict(torn_file="merged_cst.bin"),
+    dict(torn_file="timestamps.bin"),
+    dict(torn_file="state.bin"),
+])
+def test_surviving_trace_readable_or_reported(tmp_path, plan_kw):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(77), 14, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:8])
+    rec.flush()
+    _feed(rec, calls[8:], t)
+    with faults.injected(FaultPlan(seed=5, **plan_kw)):
+        try:
+            rec.flush()
+        except (OSError, SimulatedCrash):
+            pass
+    report = faults.check_trace_invariants(sd)
+    assert report["readable"]
+    committed = len(trace_format.read_manifest(sd)["segments"])
+    served = committed - len(report["skipped"])
+    # every served segment decodes to exactly its 8-record epoch: damage
+    # either never committed, or is quarantined and listed in `skipped`
+    assert report["n_records"] == 8 * served >= 8

@@ -314,23 +314,44 @@ def test_retention_ring_keeps_newest_epochs(tmp_path):
 
 def test_restarted_run_appends_to_existing_trace_dir(tmp_path):
     """A restarted job reusing a preempted run's trace_dir must append new
-    epochs after the old ones (no name collision, no stale merged trace),
-    and the stitched reader serves both runs' records in order."""
+    epochs after the old ones (no name collision), resume the cumulative
+    state from the committed segments, and finalize a merged trace that
+    covers BOTH runs' combined history (crash-resume)."""
     sd = str(tmp_path / "s")
     calls_a = _gen_calls(random.Random(20), 12, 0, 1)
     _drive_streaming(sd, [calls_a], [6])       # run A: epochs 0,1 + merged
     assert "merged" in trace_format.read_manifest(sd)
     calls_b = _gen_calls(random.Random(21), 8, 0, 1)
-    # run B (restart, same dir): its finalize must WARN that no merged
-    # trace can cover the combined history, not silently skip it
-    with pytest.warns(RuntimeWarning, match="no merged trace"):
-        _drive_streaming(sd, [calls_b], [4])
+    _drive_streaming(sd, [calls_b], [4])       # run B: resumes, appends
     manifest = trace_format.read_manifest(sd)
     epochs = [e["epoch"] for e in manifest["segments"]]
     assert epochs == sorted(epochs) == [0, 1, 2, 3]
-    # run B's merged covers only run B's epochs, so it must NOT be listed
-    # (a stale or partial merged trace would shadow run A's records), and
-    # run A's stale merged directory must be reclaimed, not leaked
+    # run B folded run A's committed state.bin deltas at startup, so its
+    # finalize merged trace covers the full four-epoch history
+    assert "merged" in manifest
+    want = [REGISTRY.spec(fid).name for fid, _, _ in calls_a + calls_b]
+    for mode in ("stitched", "merged"):
+        funcs = [r.func for _, r in TraceReader(sd, mode=mode).all_records()]
+        assert funcs == want
+
+
+def test_restart_without_resume_keeps_append_only_behavior(tmp_path):
+    """``resume=False``: run B appends after run A's epochs but cannot
+    write a merged trace covering the combined history -- its finalize
+    must WARN (not silently skip), run A's stale merged directory must be
+    reclaimed, and the stitched reader still serves both runs in order."""
+    sd = str(tmp_path / "s")
+    calls_a = _gen_calls(random.Random(20), 12, 0, 1)
+    _drive_streaming(sd, [calls_a], [6])
+    assert "merged" in trace_format.read_manifest(sd)
+    calls_b = _gen_calls(random.Random(21), 8, 0, 1)
+    with pytest.warns(RuntimeWarning, match="no merged trace"):
+        _drive_streaming(sd, [calls_b], [4], resume=False)
+    manifest = trace_format.read_manifest(sd)
+    epochs = [e["epoch"] for e in manifest["segments"]]
+    assert epochs == sorted(epochs) == [0, 1, 2, 3]
+    # run B's merged would cover only run B's epochs, so it must NOT be
+    # listed, and run A's stale merged directory must be reclaimed
     assert "merged" not in manifest
     assert not os.path.exists(os.path.join(sd, "merged"))
     reader = TraceReader(sd)  # auto -> stitched
@@ -341,8 +362,9 @@ def test_restarted_run_appends_to_existing_trace_dir(tmp_path):
 
 def test_failed_segment_write_keeps_state_consistent(tmp_path, monkeypatch):
     """A failed segment commit must surface the error WITHOUT desyncing the
-    cumulative state from the directory: later flushes and the final
-    merged trace cover exactly the committed epochs."""
+    cumulative state from the directory -- and without losing the epoch:
+    the snapshot is restored into the recorder, so the next flush covers
+    the failed epoch's records exactly once."""
     sd = str(tmp_path / "s")
     calls = _gen_calls(random.Random(22), 30, 0, 1)
     rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
@@ -356,14 +378,44 @@ def test_failed_segment_write_keeps_state_consistent(tmp_path, monkeypatch):
         rec.flush()
     monkeypatch.setattr(streaming.trace_format, "write_trace", real)
     assert rec._cum.n_epochs == 1  # the failed epoch was never folded in
+    assert rec.epochs_restored == 1
     _feed(rec, calls[20:], t)
     rec.finalize()
     manifest = trace_format.read_manifest(sd)
     assert "merged" in manifest  # cum matches the committed segments
-    committed = calls[:10] + calls[20:]  # records 10..20 died with the fault
+    # records 10..20 were retained by the restore and rode the tail flush:
+    # every record exactly once, in order
     for mode in ("stitched", "merged"):
         funcs = [r.func for _, r in TraceReader(sd, mode=mode).all_records()]
-        assert funcs == [REGISTRY.spec(fid).name for fid, _, _ in committed]
+        assert funcs == [REGISTRY.spec(fid).name for fid, _, _ in calls]
+
+
+def test_merged_mode_preserves_multi_wrap_epoch_gaps(tmp_path):
+    """Regression: epochs separated by >= 2 whole uint32 wrap periods of
+    silence (undetectable from tick values alone) must unwrap exactly in
+    merged mode.  Each epoch's blocks carry their own wrap base
+    (``tick_wrap_spans``), so the merged store matches the stitched
+    per-segment stores instead of collapsing the gap."""
+    sd = str(tmp_path / "s")
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    calls_a = _gen_calls(random.Random(30), 6, 0, 1)
+    t = _feed(rec, calls_a)
+    rec.flush()
+    # 5 whole wrap periods (~6 hours) of silence before the next epoch
+    gap = 5 * (2 ** 32)
+    calls_b = _gen_calls(random.Random(31), 6, 0, 1)
+    _feed(rec, calls_b, t + gap)
+    rec.flush()
+    rec.finalize()
+    stitched = TraceReader(sd, mode="stitched")
+    merged = TraceReader(sd, mode="merged")
+    ts_s = stitched.ts_store.load_unwrapped(0)
+    ts_m = merged.ts_store.load_unwrapped(0)
+    np.testing.assert_array_equal(ts_m, ts_s)
+    n_a = len(calls_a)
+    assert int(ts_m[n_a, 0]) - int(ts_m[n_a - 1, 0]) >= 2 * (2 ** 32)
+    assert int(ts_m[n_a, 0]) == t + gap  # exact, not just monotonic
+    assert bool(np.all(np.diff(ts_m[:, 0]) >= 0))
 
 
 # ---------------------------------------------------------------------------
