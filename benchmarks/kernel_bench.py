@@ -3,19 +3,30 @@
 Pallas-interpret timings on CPU measure the Python emulator, not TPU perf;
 the portable numbers are (a) the XLA-path wall times on this host and
 (b) the analytic FLOP/byte counts that feed the Section Roofline analysis.
+
+``encode_sweep`` measures the trace-encode hot path (delta+zigzag, varint
+packing, rank-linear column fitting) across batch sizes under every
+``encode_backend`` and writes ``artifacts/bench/encode_kernels.json`` with
+the per-backend crossover points (smallest batch where the batched backend
+beats the scalar Python encoder) and the speedup at the 64k-record batch
+the streaming flusher typically hands the encoder.
 """
 
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
-from typing import List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import encode_backend as eb
+from repro.core.encoding import pack_uvarints
+from repro.core.interprocess import batch_fit_columns
 from repro.core.timestamps import delta_zigzag_encode
 from repro.kernels.delta_encode.ops import delta_zigzag
 from repro.kernels.flash_attention.ref import attention_ref
@@ -35,8 +46,100 @@ def _timeit(fn, *args, reps=5) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def main(fast: bool = False) -> List[str]:
+def _wall(fn, reps: int) -> float:
+    fn()  # warm (jit compile / allocator)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+_ENCODE_OPS = ("delta_zigzag", "pack_uvarints", "fit_columns")
+
+
+def encode_sweep(smoke: bool = False) -> Dict[str, Any]:
+    """Batch-size sweep of the encode hot path under every backend."""
+    rng = np.random.RandomState(3)
+    sizes = [256, 4096, 1 << 16] if smoke else \
+        [64, 256, 1024, 4096, 16384, 1 << 16, 1 << 18]
+    backends = ["python", "numpy", "pallas"]
+    # pallas on a CPU-only host runs the interpreter: cap its sizes so the
+    # sweep stays CI-sized (the crossover there is numpy's anyway)
+    pallas_cap = (1 << 16) if eb.has_accelerator() else \
+        (4096 if smoke else (1 << 14))
+
+    timings: Dict[str, Dict[str, Dict[str, float]]] = {
+        op: {b: {} for b in backends} for op in _ENCODE_OPS}
+
+    for n in sizes:
+        ticks = np.cumsum(rng.randint(0, 1000, size=n)).astype(np.int64)
+        vals = [int(v) for v in rng.randint(0, 1 << 48, size=n,
+                                            dtype=np.uint64)]
+        ranks = 16
+        ncols = max(1, n // ranks)
+        cols = [[b + r * a for r in range(ranks)]
+                for a, b in zip(rng.randint(1, 9, size=ncols),
+                                rng.randint(0, 10**6, size=ncols))]
+        reps = 1 if n >= (1 << 16) else 3
+        for b in backends:
+            if b == "pallas" and n > pallas_cap:
+                continue
+            timings["delta_zigzag"][b][str(n)] = _wall(
+                lambda b=b, t=ticks: eb.delta_zigzag(t, b), reps)
+            timings["pack_uvarints"][b][str(n)] = _wall(
+                lambda b=b, v=vals: pack_uvarints(v, backend=b), reps)
+            timings["fit_columns"][b][str(n)] = _wall(
+                lambda b=b, c=cols: batch_fit_columns(c, backend=b), reps)
+
+    crossover: Dict[str, Dict[str, Optional[int]]] = {}
+    speedup_64k: Dict[str, Dict[str, Optional[float]]] = {}
+    for op in _ENCODE_OPS:
+        crossover[op] = {}
+        speedup_64k[op] = {}
+        py = timings[op]["python"]
+        for b in ("numpy", "pallas"):
+            xs = [n for n in sizes
+                  if str(n) in timings[op][b]
+                  and timings[op][b][str(n)] < py[str(n)]]
+            crossover[op][b] = min(xs) if xs else None
+            k = str(1 << 16)
+            speedup_64k[op][b] = (round(py[k] / timings[op][b][k], 2)
+                                  if k in timings[op][b] else None)
+
+    report = {
+        "host_accelerator": eb.has_accelerator(),
+        "interpret_mode": eb.interpret_mode(),
+        "sizes": sizes,
+        "timings_s": timings,
+        "crossover_records": crossover,
+        "speedup_at_64k": speedup_64k,
+        "thresholds": {"numpy_min_batch": eb.NUMPY_MIN_BATCH,
+                       "pallas_min_batch": eb.PALLAS_MIN_BATCH},
+    }
     os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "encode_kernels.json"), "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def encode_summary_lines(report: Dict[str, Any]) -> List[str]:
+    lines = []
+    for op in _ENCODE_OPS:
+        for b in ("numpy", "pallas"):
+            co = report["crossover_records"][op][b]
+            sp = report["speedup_at_64k"][op][b]
+            lines.append(
+                f"encode,{op},{b},crossover="
+                f"{co if co is not None else '-'}"
+                f",speedup@64k={sp if sp is not None else '-'}x")
+    return lines
+
+
+def main(fast: bool = False, smoke: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    if smoke:
+        # CI path: the encode sweep IS the artifact; skip the model kernels
+        return encode_summary_lines(encode_sweep(smoke=True))
     rng = np.random.RandomState(0)
     rows = []
 
@@ -82,10 +185,20 @@ def main(fast: bool = False) -> List[str]:
         wcsv = csv.DictWriter(f, rows[0].keys())
         wcsv.writeheader()
         wcsv.writerows(rows)
-    return [f"kernel,{r['kernel']},{r['us']:.1f}us,{r['derived']}"
-            for r in rows]
+    lines = [f"kernel,{r['kernel']},{r['us']:.1f}us,{r['derived']}"
+             for r in rows]
+    lines += encode_summary_lines(encode_sweep(smoke=fast))
+    return lines
 
 
 if __name__ == "__main__":
-    for line in main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="small shapes + reduced encode sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="encode sweep only (CI): writes "
+                         "artifacts/bench/encode_kernels.json")
+    ns = ap.parse_args()
+    for line in main(fast=ns.fast, smoke=ns.smoke):
         print(line)

@@ -18,13 +18,26 @@ from __future__ import annotations
 
 import struct
 from dataclasses import dataclass
-from typing import Any, Iterable, List, Sequence, Tuple
+from typing import Any, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 # ---------------------------------------------------------------------------
 # varint / zigzag primitives
 # ---------------------------------------------------------------------------
+
+
+class VarintRangeError(ValueError):
+    """A batched uvarint value falls outside [0, 2^64).
+
+    The batched packers (NumPy / Pallas, see ``encode_backend``) operate on
+    u64 lanes, so a >64-bit int cannot take the accelerated path.  Callers
+    that legitimately carry arbitrary-precision ints (``encode_value`` /
+    ``write_svarint`` tagged values) keep using the scalar
+    :func:`write_uvarint`, which stays arbitrary-precision."""
+
+
+_U64_MAX = (1 << 64) - 1
 
 
 def zigzag(n: int) -> int:
@@ -86,9 +99,27 @@ def read_blob(buf: bytes, pos: int) -> Tuple[bytes, int]:
     return bytes(buf[pos : pos + n]), pos + n
 
 
-def pack_uvarints(values: Iterable[int]) -> bytes:
+def pack_uvarints(values: Iterable[int],
+                  backend: Optional[str] = None) -> bytes:
+    """Concatenated uvarints of ``values`` (all in [0, 2^64) -- the
+    batched backends mirror the kernels' u64 lane width, and the scalar
+    path enforces the same bound so every backend agrees; a wider int
+    raises :class:`VarintRangeError`).
+
+    Large batches dispatch to the vectorized packers in
+    ``encode_backend`` (``backend=None`` -> auto crossover); output is
+    byte-identical across backends."""
+    if not isinstance(values, (list, tuple)):
+        values = list(values)
+    from . import encode_backend as _eb
+    eff = _eb.resolve(backend, len(values))
+    if eff != "python":
+        return _eb.pack_uvarints_batch(values, eff)
     out = bytearray()
     for v in values:
+        if not 0 <= v <= _U64_MAX:
+            raise VarintRangeError(
+                f"uvarint batch value outside [0, 2^64): {v!r}")
         write_uvarint(out, v)
     return bytes(out)
 

@@ -128,12 +128,16 @@ def _fit_component(values: Sequence[int]) -> Optional[Any]:
 _I64_SAFE = 1 << 62
 
 
-def batch_fit_columns(columns: List[Sequence[int]]) -> List[Optional[Any]]:
+def batch_fit_columns(columns: List[Sequence[int]],
+                      backend: Optional[str] = None) -> List[Optional[Any]]:
     """Vectorized :func:`_fit_component` over many equal-length columns.
 
-    One NumPy pass classifies every column as constant (-> int), exactly
+    One pass classifies every column as constant (-> int), exactly
     rank-linear with nonzero slope (-> RankPattern) or neither (-> None).
-    Falls back to the scalar loop when values do not fit safely in int64.
+    ``backend`` picks the classifier (``encode_backend.fit_classify``:
+    NumPy, or a single pallas_call over padded column tiles); results are
+    identical.  Falls back to the scalar loop when values do not fit
+    safely in int64.
     """
     if not columns:
         return []
@@ -145,9 +149,12 @@ def batch_fit_columns(columns: List[Sequence[int]]) -> List[Optional[Any]]:
         return [_fit_component(c) for c in columns]
     if V.shape[1] < 2:
         return [int(c[0]) for c in columns]
-    d = V[:, 1:] - V[:, :-1]
-    const = (d == 0).all(axis=1)
-    linear = (d == d[:, :1]).all(axis=1) & (d[:, 0] != 0)
+    from . import encode_backend as _eb
+    eff = _eb.resolve(backend, V.size)
+    if eff == "python":
+        return [_fit_component(c) for c in columns]
+    const, linear, d0 = _eb.fit_classify(V, eff)
+    d = d0[:, None]  # only d[:, 0] is consumed below
     out: List[Optional[Any]] = []
     for i in range(V.shape[0]):
         if const[i]:
@@ -185,7 +192,9 @@ def _fit_offsets(per_rank: List[tuple]) -> Optional[tuple]:
     return tuple(out)
 
 
-def _fit_offsets_batch(all_per_rank: List[List[tuple]]) -> List[Optional[tuple]]:
+def _fit_offsets_batch(all_per_rank: List[List[tuple]],
+                       backend: Optional[str] = None
+                       ) -> List[Optional[tuple]]:
     """Batched :func:`_fit_offsets`: gather every int / IterPattern-component
     column from every candidate group, fit them in one vectorized pass, then
     reassemble per-group fits.  Result-equivalent to the scalar path."""
@@ -213,7 +222,7 @@ def _fit_offsets_batch(all_per_rank: List[List[tuple]]) -> List[Optional[tuple]]
                 ok = False
                 break
         plans.append(desc if ok else None)
-    col_fits = batch_fit_columns(columns)
+    col_fits = batch_fit_columns(columns, backend=backend)
     out: List[Optional[tuple]] = []
     for plan in plans:
         if plan is None:
@@ -243,14 +252,17 @@ def _fit_offsets_batch(all_per_rank: List[List[tuple]]) -> List[Optional[tuple]]
 # ---------------------------------------------------------------------------
 
 
-def arith_segments(V: np.ndarray) -> List[Tuple[int, int]]:
+def arith_segments(V: np.ndarray,
+                   backend: Optional[str] = None) -> List[Tuple[int, int]]:
     """Greedy arithmetic-run segmentation of a (n, k) value matrix.
 
     Returns half-open ``(start, end)`` element segments such that within a
     segment every consecutive row difference equals the segment's first
     difference (the run stride), mirroring the streaming protocol of
     ``IntraPatternTracker``: a run's stride is set by its second element and
-    the run breaks at the first non-matching row.
+    the run breaks at the first non-matching row.  ``backend`` dispatches
+    the change-point scan (``encode_backend.run_boundaries`` over the diff
+    rows); segmentation is identical across backends.
     """
     n = len(V)
     if n == 0:
@@ -261,7 +273,10 @@ def arith_segments(V: np.ndarray) -> List[Tuple[int, int]]:
     if d.ndim == 1:
         d = d[:, None]
     # cp[j] for j >= 1: diff j differs from diff j-1
-    cp = np.flatnonzero((d[1:] != d[:-1]).any(axis=1)) + 1
+    from . import encode_backend as _eb
+    mask = _eb.run_boundaries(d, backend)
+    mask[0] = False  # position 0 is forced True by the boundary op
+    cp = np.flatnonzero(mask)
     segs: List[Tuple[int, int]] = []
     s = 0
     while s < n:
@@ -294,7 +309,9 @@ def merge_csts(rank_csts: List[List[bytes]], registry: FunctionRegistry,
     """Merge per-rank CSTs into one (paper §3.3.1).
 
     ``fit_mode`` selects the rank-linear fitter: ``"python"`` (per-group
-    scalar loop) or ``"vectorized"`` (NumPy batch).  Output is identical.
+    scalar loop), ``"vectorized"`` (NumPy batch) or ``"pallas"`` (the
+    ``kernels/delta_encode`` column-fit kernel, interpret-mode on CPU).
+    Output is identical across modes.
     """
     nranks = len(rank_csts)
     # -- pass 1: decode + group by (masked signature, occurrence index) ------
@@ -337,7 +354,9 @@ def merge_csts(rank_csts: List[List[bytes]], registry: FunctionRegistry,
         if fit_mode == "python":
             fits = [_fit_offsets(pr) for _, pr in candidates]
         else:
-            fits = _fit_offsets_batch([pr for _, pr in candidates])
+            fits = _fit_offsets_batch(
+                [pr for _, pr in candidates],
+                backend="pallas" if fit_mode == "pallas" else None)
         for (gkey, _), fit in zip(candidates, fits):
             if fit is not None:
                 merged_offsets[gkey] = fit

@@ -75,15 +75,16 @@ class IntraPatternTracker:
         self._runs[key] = _RunState(index=1, base=vals, stride=None)
         return list(vals)
 
-    def encode_many(self, key: Any, rows: Sequence[Sequence[int]]
-                    ) -> List[List[Encoded]]:
+    def encode_many(self, key: Any, rows: Sequence[Sequence[int]],
+                    backend: Optional[str] = None) -> List[List[Encoded]]:
         """Batched :meth:`encode`: one call per row, vectorized.
 
         Equivalent (outputs and final run state) to
         ``[self.encode(key, r) for r in rows]``, but arithmetic runs are
-        found with one NumPy segmentation pass instead of per-call Python
-        work.  Falls back to the scalar loop for ragged/empty arities or
-        values outside the int64-safe range.
+        found with one segmentation pass (``backend`` dispatches it:
+        NumPy or the grammar_stats boundary kernel) instead of per-call
+        Python work.  Falls back to the scalar loop for ragged/empty
+        arities or values outside the int64-safe range.
         """
         rows = [tuple(int(v) for v in r) for r in rows]
         if not self.enabled or not rows:
@@ -139,7 +140,7 @@ class IntraPatternTracker:
 
         if p < n:
             W = V[p:]
-            segs = arith_segments(W)
+            segs = arith_segments(W, backend=backend)
             for s, e in segs:
                 base = tuple(int(v) for v in W[s])
                 out.append(list(base))

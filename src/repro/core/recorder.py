@@ -113,6 +113,14 @@ class RecorderConfig:
     # ranks_present mask; a rank whose delta missed the commit keeps it
     # in memory for the next attempt (see streaming.run_flush_degraded)
     flush_timeout_s: Optional[float] = None
+    # backend for the batched encode/fit hot paths (timestamp delta+zigzag,
+    # varint packing, rank-linear fitting): "python" (scalar reference),
+    # "numpy" (vectorized host), "pallas" (device kernels; interpret-mode
+    # on CPU-only hosts), or "auto" (crossover by batch size -- numpy on
+    # CPU, kernels for large batches when an accelerator is attached).
+    # Every backend writes byte-identical traces
+    # (tests/test_encode_kernels.py); see core/encode_backend.py.
+    encode_backend: str = "auto"
 
     def __post_init__(self) -> None:
         # the same bounds from_env enforces, so directly-constructed
@@ -135,6 +143,10 @@ class RecorderConfig:
         if self.flush_timeout_s is not None and not self.flush_timeout_s > 0:
             raise ValueError("flush_timeout_s must be > 0, got "
                              f"{self.flush_timeout_s}")
+        from .encode_backend import BACKENDS
+        if self.encode_backend not in BACKENDS:
+            raise ValueError(f"encode_backend must be one of {BACKENDS}, "
+                             f"got {self.encode_backend!r}")
 
     @classmethod
     def from_env(cls, **overrides) -> "RecorderConfig":
@@ -177,6 +189,14 @@ class RecorderConfig:
         t = _env_float("RECORDER_FLUSH_TIMEOUT_S")
         if t is not None:
             cfg.flush_timeout_s = t
+        eb = os.environ.get("RECORDER_ENCODE_BACKEND")
+        if eb:
+            from .encode_backend import BACKENDS
+            if eb not in BACKENDS:
+                raise ValueError(
+                    f"RECORDER_ENCODE_BACKEND must be one of {BACKENDS}, "
+                    f"got {eb!r}")
+            cfg.encode_backend = eb
         return cfg
 
 
@@ -618,7 +638,8 @@ class Recorder:
                     max_epochs_retained=self.config.max_epochs_retained,
                     meta_extra={**self._metadata(comm.size),
                                 "tick_wraps": wraps},
-                    timeout_s=self.config.flush_timeout_s)
+                    timeout_s=self.config.flush_timeout_s,
+                    encode_backend=self.config.encode_backend)
                 self.last_flush_outcome = outcome
                 if outcome.exc is not None:
                     raise outcome.exc
@@ -642,7 +663,8 @@ class Recorder:
                     ts_block_records=self.config.ts_block_records,
                     max_epochs_retained=self.config.max_epochs_retained,
                     meta_extra={**self._metadata(comm.size),
-                                "tick_wraps": wraps})
+                                "tick_wraps": wraps},
+                    encode_backend=self.config.encode_backend)
         except BaseException:
             self._restore_epoch(entries, cfg, ticks, wraps)
             raise
@@ -781,7 +803,8 @@ class Recorder:
 
     def local_state(self) -> Tuple[List[bytes], bytes, bytes]:
         """(CST entries, serialized CFG, compressed timestamps)."""
-        ts = compress_timestamps(self.timestamps.as_array())
+        ts = compress_timestamps(self.timestamps.as_array(),
+                                 backend=self.config.encode_backend)
         return self.cst.entries, self.grammar.serialize(), ts
 
     def finalize(self, comm: Optional[Comm] = None,
@@ -872,7 +895,9 @@ class Recorder:
             rank_ts = [g[2] for g in gathered]
             merge, cfgs = finalize_ranks(
                 rank_csts, rank_cfgs, self.registry,
-                inter_patterns=self.config.inter_patterns)
+                inter_patterns=self.config.inter_patterns,
+                fit_mode=("pallas" if self.config.encode_backend == "pallas"
+                          else "vectorized"))
         stats = RecorderStats(
             n_records=self.n_records,
             n_skipped=self.n_skipped,

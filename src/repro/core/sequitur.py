@@ -113,6 +113,39 @@ class Sequitur:
             self._splice_after(tail, node)
             self._scan_digram(node.prev)
 
+    def push_stream(self, terminals, backend: Optional[str] = None) -> None:
+        """Append a whole terminal array with RLE pre-tokenization.
+
+        Run boundaries are found in one batched pass
+        (``encode_backend.run_boundaries``: NumPy or the grammar_stats
+        kernel) and each maximal run enters the grammar as a single
+        ``push(term, run_len)`` -- the batch semantics of the existing
+        exponent API, so the expansion is always identical to per-terminal
+        pushes and the grammar is identical to calling
+        ``push(t, k)`` per run.  The ``python`` backend is the per-run
+        scalar reference."""
+        import numpy as np
+        arr = np.asarray(terminals, dtype=np.int64).reshape(-1)
+        n = int(arr.size)
+        if n == 0:
+            return
+        from . import encode_backend as _eb
+        eff = _eb.resolve(backend, n)
+        if eff == "python":
+            run_start = 0
+            vals = arr.tolist()
+            for i in range(1, n):
+                if vals[i] != vals[run_start]:
+                    self.push(vals[run_start], i - run_start)
+                    run_start = i
+            self.push(vals[run_start], n - run_start)
+            return
+        mask = _eb.run_boundaries(arr[:, None], eff)
+        starts = np.flatnonzero(mask)
+        ends = np.append(starts[1:], n)
+        for s, e in zip(starts.tolist(), ends.tolist()):
+            self.push(int(arr[s]), e - s)
+
     def rules(self) -> List[Rule]:
         seen: Dict[int, Rule] = {}
         stack = [self.start]

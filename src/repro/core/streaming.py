@@ -324,7 +324,8 @@ def run_flush(comm, *, entries: List[bytes], cfg: bytes, ticks: np.ndarray,
               cum: CumulativeState, inter_patterns: bool = True,
               ts_block_records: int = 4096,
               max_epochs_retained: Optional[int] = None,
-              meta_extra: Optional[Dict[str, Any]] = None
+              meta_extra: Optional[Dict[str, Any]] = None,
+              encode_backend: Optional[str] = None
               ) -> Optional[Dict[str, Any]]:
     """One epoch flush over ``comm``.  Every rank contributes its delta
     (local CST entries, serialized CFG, raw ticks); rank 0 folds the
@@ -334,7 +335,8 @@ def run_flush(comm, *, entries: List[bytes], cfg: bytes, ticks: np.ndarray,
     leaf = make_rank_state(comm.rank, entries, cfg, registry)
     blob = comm.reduce_tree(serialize_rank_state(leaf),
                             merge_serialized_states)
-    blocks = compress_timestamps_blocked(ticks, ts_block_records) \
+    blocks = compress_timestamps_blocked(ticks, ts_block_records,
+                                         backend=encode_backend) \
         if len(ticks) else []
     packed = comm.gather_tree(pack_ts_blocks(blocks))
     if comm.rank != 0:
@@ -409,7 +411,8 @@ def run_flush_degraded(comm, *, entries: List[bytes], cfg: bytes,
                        ts_block_records: int = 4096,
                        max_epochs_retained: Optional[int] = None,
                        meta_extra: Optional[Dict[str, Any]] = None,
-                       timeout_s: float = 30.0) -> FlushOutcome:
+                       timeout_s: float = 30.0,
+                       encode_backend: Optional[str] = None) -> FlushOutcome:
     """One epoch flush that survives unresponsive ranks.
 
     Same reduction tree and association order as :func:`run_flush` (a
@@ -433,7 +436,8 @@ def run_flush_degraded(comm, *, entries: List[bytes], cfg: bytes,
     tags assume lockstep invocation counts.
     """
     leaf_state = make_rank_state(comm.rank, entries, cfg, registry)
-    blocks = compress_timestamps_blocked(ticks, ts_block_records) \
+    blocks = compress_timestamps_blocked(ticks, ts_block_records,
+                                         backend=encode_backend) \
         if len(ticks) else []
     leaf = ((comm.rank,), serialize_rank_state(leaf_state),
             ((comm.rank, pack_ts_blocks(blocks)),))

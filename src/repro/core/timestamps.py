@@ -103,25 +103,25 @@ class TimestampBuffer:
         return arr
 
 
-def delta_zigzag_encode(ticks: np.ndarray) -> np.ndarray:
+def delta_zigzag_encode(ticks: np.ndarray,
+                        backend: Optional[str] = None) -> np.ndarray:
     """Flattened interleaved (entry, exit) stream -> delta -> zigzag u32.
 
     Deltas are wrapped into signed 32-bit range (mod 2^32) BEFORE zigzag:
     ticks are u32, so a raw delta can need 33 bits; the wrap keeps the
     encoding exactly 4 bytes and the mod-2^32 cumsum decode is lossless.
     (This also matches the Pallas kernel's int32 arithmetic bit-for-bit.)
+
+    ``backend`` selects the python/numpy/pallas implementation (see
+    ``encode_backend``); output is bit-identical across all of them.
     """
     flat = ticks.reshape(-1).astype(np.int64)
     if flat.size == 0:
         return np.empty((0,), np.uint32)
-    deltas = np.empty_like(flat)
-    deltas[0] = flat[0]
     # timestamps are monotone per column but interleaved entry/exit deltas
     # may be negative -> zigzag
-    deltas[1:] = flat[1:] - flat[:-1]
-    deltas = ((deltas + (1 << 31)) % (1 << 32)) - (1 << 31)
-    zz = (deltas << 1) ^ (deltas >> 63)
-    return (zz & 0xFFFFFFFF).astype(np.uint32)
+    from . import encode_backend as _eb
+    return _eb.delta_zigzag(flat, backend)
 
 
 def delta_zigzag_decode(zz: np.ndarray, ncols: int = 2) -> np.ndarray:
@@ -131,8 +131,9 @@ def delta_zigzag_decode(zz: np.ndarray, ncols: int = 2) -> np.ndarray:
     return flat.astype(np.uint32).reshape(-1, ncols)
 
 
-def compress_timestamps(ticks: np.ndarray) -> bytes:
-    zz = delta_zigzag_encode(ticks)
+def compress_timestamps(ticks: np.ndarray,
+                        backend: Optional[str] = None) -> bytes:
+    zz = delta_zigzag_encode(ticks, backend)
     return zlib.compress(zz.astype("<u4").tobytes(), level=6)
 
 
@@ -161,7 +162,8 @@ def effective_exit(ticks: np.ndarray) -> np.ndarray:
 
 
 def compress_timestamps_blocked(ticks: np.ndarray,
-                                block_records: int = DEFAULT_BLOCK_RECORDS
+                                block_records: int = DEFAULT_BLOCK_RECORDS,
+                                backend: Optional[str] = None
                                 ) -> List[TsBlock]:
     """Split ``ticks`` -- (n, 2) entry/exit or (n, 3) with a data-bytes
     column -- into independently-decodable zlib blocks.
@@ -181,8 +183,8 @@ def compress_timestamps_blocked(ticks: np.ndarray,
         t_min = int(blk[:, 0].astype(np.int64).min())
         t_max = int(effective_exit(blk).max())
         n_bytes = int(blk[:, 2].astype(np.int64).sum()) if sized else None
-        blocks.append((compress_timestamps(blk), len(blk), t_min, t_max,
-                       n_bytes))
+        blocks.append((compress_timestamps(blk, backend), len(blk), t_min,
+                       t_max, n_bytes))
     return blocks
 
 

@@ -49,7 +49,7 @@ from .encoding import (Handle, IterPattern, RankPattern,
                        decode_signatures_batch)
 from .patterns import IntraPatternDecoder
 from .reader import Record, _resolve_rank
-from .sequitur import (expand_grammar, expand_grammar_reversed,
+from .sequitur import (_topo_order, expand_grammar, expand_grammar_reversed,
                        terminal_counts, terminal_positions)
 from .specs import DATA_FUNCS
 from .timestamps import effective_exit
@@ -62,6 +62,15 @@ _IO_LAYERS = ("posix", "shardio")
 _WRITE_FUNCS = ("pwrite", "shard_write_at")
 _I64_SAFE = 1 << 62
 _NO_HANDLE = object()
+
+
+class _SpanBail(Exception):
+    """Span walk cannot resolve rank-symbolically (same conditions under
+    which the linear replay returns None)."""
+
+
+class _SpanOverflow(Exception):
+    """Span walk left the int64-exact range; redo with Python ints."""
 
 
 def _contains_rankpattern(v: Any) -> bool:
@@ -265,6 +274,22 @@ class TraceView:
     def total_records(self) -> int:
         return sum(self.total_terminal_counts().values())
 
+    def digram_counts(self, rank: int = 0,
+                      backend: Optional[str] = None
+                      ) -> Dict[Tuple[int, int], int]:
+        """Adjacent-pair (digram) counts of one rank's expanded call-signature
+        stream -- the repeated-structure profile Sequitur compresses.
+
+        The expansion is materialized once as an int64 vector and the
+        histogram dispatched through :mod:`encode_backend` (NumPy
+        bincount or the ``grammar_stats`` digram kernel, per ``backend``).
+        """
+        stream = np.fromiter(
+            expand_grammar(self.grammars[self.cfg_index[rank]]),
+            dtype=np.int64)
+        from . import encode_backend as _eb
+        return _eb.digram_histogram(stream, len(self._sigs), backend)
+
     # -- lazy, memoized per-rank timestamps -----------------------------------
 
     @property
@@ -434,7 +459,93 @@ class TraceView:
         return per
 
     def _per_file_walk(self, u: int) -> Dict[Any, Dict[str, int]]:
-        """Exact per-file attribution: one walk of CFG ``u``'s stream."""
+        """Exact per-file attribution without expanding the stream.
+
+        Recursive rule evaluation with a per-rule memo (the carried-over
+        ROADMAP item): a rule's contribution depends only on the live
+        handle->path bindings of the handles its subtree READS, so the memo
+        key is ``(rule, entry values of its read set)``.  Exponents
+        collapse in closed form -- a rule's state effect is a constant
+        overwrite map, hence idempotent, so application 2 is a fixed point
+        and apps ``2..e`` contribute ``(e-1) x`` its result.  SPMD loop
+        grammars evaluate in O(|grammar|) instead of O(stream).
+        Property-tested equal to :meth:`_per_file_walk_linear`, which also
+        serves as the fallback for pathologically deep grammars."""
+        try:
+            return self._per_file_walk_memo(u)
+        except RecursionError:
+            return self._per_file_walk_linear(u)
+
+    def _per_file_walk_memo(self, u: int) -> Dict[Any, Dict[str, int]]:
+        rules = self.grammars[u]
+        sigs = self._sigs
+        cols = self.columns
+        n = len(rules)
+        # static per-rule summaries, children before parents: the handles a
+        # rule's subtree attributes data calls to (its read set) and its net
+        # handle->path state update (constant strings -> idempotent)
+        reads: List[set] = [set() for _ in range(n)]
+        upd: List[Dict[int, str]] = [{} for _ in range(n)]
+        for i in reversed(_topo_order(rules)):
+            rd: set = set()
+            up: Dict[int, str] = {}
+            for code, _exp in rules[i]:
+                x = code >> 1
+                if code & 1:
+                    rd |= reads[x]
+                    up.update(upd[x])
+                else:
+                    s = sigs[x]
+                    if s.is_data and s.handle is not _NO_HANDLE:
+                        rd.add(s.handle)
+                    if s.name in _OPEN_FUNCS and hasattr(cols.ret[x], "id"):
+                        up[cols.ret[x].id] = str(cols.args[x][0])
+            reads[i] = rd
+            upd[i] = up
+
+        live: Dict[int, str] = {}
+        memo: Dict[tuple, Dict[Any, Tuple[int, int]]] = {}
+
+        def add(dst: Dict[Any, Tuple[int, int]],
+                src: Dict[Any, Tuple[int, int]], mult: int) -> None:
+            for k, (b, c) in src.items():
+                ob, oc = dst.get(k, (0, 0))
+                dst[k] = (ob + mult * b, oc + mult * c)
+
+        def walk(rid: int) -> Dict[Any, Tuple[int, int]]:
+            rkey = (rid,) + tuple((h, live.get(h))
+                                  for h in sorted(reads[rid]))
+            hit = memo.get(rkey)
+            if hit is not None:
+                live.update(upd[rid])
+                return hit
+            contrib: Dict[Any, Tuple[int, int]] = {}
+            for code, exp in rules[rid]:
+                x = code >> 1
+                if code & 1:
+                    add(contrib, walk(x), 1)
+                    if exp > 1:
+                        # state after app 1 is a fixed point: apps 2..exp
+                        # all see the same entry state and contribute alike
+                        add(contrib, walk(x), exp - 1)
+                else:
+                    s = sigs[x]
+                    if s.name in _OPEN_FUNCS and hasattr(cols.ret[x], "id"):
+                        live[cols.ret[x].id] = str(cols.args[x][0])
+                    if s.is_data:
+                        k = "?" if s.handle is _NO_HANDLE \
+                            else live.get(s.handle)
+                        ob, oc = contrib.get(k, (0, 0))
+                        contrib[k] = (ob + exp * s.size, oc + exp)
+            memo[rkey] = contrib
+            return contrib
+
+        res = walk(0) if rules else {}
+        return {k: {"bytes": b, "calls": c} for k, (b, c) in res.items()}
+
+    def _per_file_walk_linear(self, u: int) -> Dict[Any, Dict[str, int]]:
+        """Exact per-file attribution: one linear walk of CFG ``u``'s
+        stream (the reference for :meth:`_per_file_walk`)."""
         sigs = self._sigs
         cols = self.columns
         handles: Dict[int, str] = {}
@@ -563,17 +674,190 @@ class TraceView:
 
     def _span_cols(self, u: int, targets: tuple):
         """Rank-symbolic write extents of CFG ``u``, grouped by handle id in
-        stream order: one walk per unique CFG, replaying the pattern-run
-        decoding symbolically (offsets stay linear functions of the rank).
+        stream order (offsets stay linear functions of the rank).
 
-        Returns ``[(hid, coefs, consts, sizes, np_cols)] `` or None when
+        Returns ``[(hid, coefs, consts, sizes, np_cols)]`` or None when
         the run evolution could be rank-dependent (distinct pattern
         signatures carrying RankPattern compared under one key) -- callers
         then fall back to the exact per-rank record path.
+
+        The default implementation (:meth:`_span_cols_walk`) replays the
+        grammar recursively with closed-form loop extrapolation: a symbol
+        repeated ``e`` times is applied twice, and if the pattern-run state
+        is stationary between the applications the remaining ``e - 2`` are
+        emitted as vectorized columns (each emission advances linearly in
+        its run index) -- sublinear walk work for SPMD loops (ROADMAP
+        carried-over item).  :meth:`_span_cols_linear` is the
+        property-tested reference and the fallback for int64-overflowing
+        offsets or pathologically deep grammars.
         """
         ck = (u, targets)
         if ck in self._spancols:
             return self._spancols[ck]
+        try:
+            result = self._span_cols_walk(u, targets)
+        except _SpanBail:
+            result = None
+        except (_SpanOverflow, RecursionError):
+            result = self._span_cols_linear(u, targets)
+        self._spancols[ck] = result
+        return result
+
+    def _span_cols_walk(self, u: int, targets: tuple):
+        rules = self.grammars[u]
+        sigs = self._sigs
+        nranks = self.nranks
+        runs: Dict[Any, Tuple[int, Optional[tuple]]] = {}
+        key_ids: Dict[Any, int] = {}      # run key -> dense id (kid)
+        # columnar emission log: 7 parallel columns
+        #   hid, coef, const, size, ca, va, kid
+        # (ca, va) is the per-run-index advance of (coef, const) -- the
+        # rank-linear components of the IterPattern stride -- and kid the
+        # emission's run key (-1: value does not advance with any run).
+        buf: List[List[int]] = [[] for _ in range(7)]
+        chunks: List[List[np.ndarray]] = []
+
+        def seal() -> None:
+            if buf[0]:
+                try:
+                    chunks.append([np.asarray(c, np.int64) for c in buf])
+                except OverflowError:
+                    raise _SpanOverflow from None
+                for c in buf:
+                    c.clear()
+
+        def do_terminal(x: int) -> None:
+            s = sigs[x]
+            vals0 = None  # (coef, const, ca, va, kid) of offset slot 0
+            if s.enc is not None:
+                (key, enc, patsig, has_iter, off_slots, _ret_is_offset,
+                 key_rankdep) = s.enc
+                if key_rankdep:
+                    raise _SpanBail
+                if not has_iter:
+                    runs[key] = (1, None)
+                    c0, k0 = _lin0(enc[0])
+                    vals0 = (c0, k0, 0, 0, -1)
+                else:
+                    idx, prev = runs.get(key, (1, None))
+                    if prev is not None and prev == patsig:
+                        idx += 1
+                    elif prev is not None and (
+                            _contains_rankpattern(prev)
+                            or _contains_rankpattern(patsig)):
+                        raise _SpanBail
+                    v = enc[0]
+                    if isinstance(v, IterPattern):
+                        ca, va = _lin0(v.a)
+                        cb, vb = _lin0(v.b)
+                        kid = key_ids.setdefault(key, len(key_ids))
+                        vals0 = (cb + idx * ca, vb + idx * va, ca, va, kid)
+                    else:
+                        c0, k0 = _lin0(v)
+                        vals0 = (c0, k0, 0, 0, -1)
+                    runs[key] = (idx, patsig)
+            if (s.name in targets and vals0 is not None
+                    and s.enc is not None and s.enc[4]):
+                if s.size_symbolic:
+                    raise _SpanBail
+                hid = -1 if s.handle is _NO_HANDLE else s.handle
+                row = (hid, vals0[0], vals0[1], s.size, vals0[2], vals0[3],
+                       vals0[4])
+                for c, v in zip(buf, row):
+                    c.append(v)
+
+        def rep(fn, exp: int) -> None:
+            if exp <= 2:
+                for _ in range(exp):
+                    fn()
+                return
+            fn()                          # application 1
+            s1 = dict(runs)
+            seal()
+            mark = len(chunks)
+            fn()                          # application 2
+            s2 = dict(runs)
+            # stationarity: same run keys with the same pattern signatures
+            # -> apps 3..exp replay app 2 with run indices shifted by the
+            # constant per-application advance (the guard bails are static
+            # or patsig-driven, so app 2 passing implies the rest pass)
+            if set(s1) != set(s2) or any(s1[k][1] != s2[k][1] for k in s1):
+                for _ in range(exp - 2):
+                    fn()
+                return
+            reps = exp - 2
+            seal()
+            app2 = chunks[mark:]
+            if app2:
+                cols2 = [np.concatenate([c[j] for c in app2])
+                         for j in range(7)]
+                hid2, coef2, const2, size2, ca2, va2, kid2 = cols2
+                di_by_kid = np.zeros(len(key_ids) + 1, np.int64)
+                for k, (i2, _sig) in s2.items():
+                    kid = key_ids.get(k)
+                    if kid is not None:
+                        di_by_kid[kid] = i2 - s1[k][0]
+                d = di_by_kid[np.where(kid2 >= 0, kid2, len(key_ids))]
+                dc = d * ca2
+                dk = d * va2
+                # keep the extrapolated columns int64-exact (float bound is
+                # conservative at these magnitudes: slack << headroom)
+                base = max(float(np.abs(coef2).max(initial=0)),
+                           float(np.abs(const2).max(initial=0)))
+                step = max(float(np.abs(dc).max(initial=0)),
+                           float(np.abs(dk).max(initial=0)))
+                if base + reps * step >= float(_I64_SAFE):
+                    raise _SpanOverflow
+                j = np.arange(1, reps + 1, dtype=np.int64)
+                chunks.append([
+                    np.tile(hid2, reps),
+                    (coef2[None, :] + j[:, None] * dc[None, :]).ravel(),
+                    (const2[None, :] + j[:, None] * dk[None, :]).ravel(),
+                    np.tile(size2, reps),
+                    np.tile(ca2, reps),
+                    np.tile(va2, reps),
+                    np.tile(kid2, reps),
+                ])
+            for k, (i2, sig) in s2.items():
+                di = i2 - s1[k][0]
+                if di:
+                    runs[k] = (i2 + reps * di, sig)
+
+        def walk_rule(rid: int) -> None:
+            for code, exp in rules[rid]:
+                x = code >> 1
+                if code & 1:
+                    rep(lambda x=x: walk_rule(x), exp)
+                else:
+                    rep(lambda x=x: do_terminal(x), exp)
+
+        if rules:
+            walk_rule(0)
+        seal()
+        if not chunks:
+            return []
+        hids = np.concatenate([c[0] for c in chunks])
+        coefs = np.concatenate([c[1] for c in chunks])
+        consts = np.concatenate([c[2] for c in chunks])
+        sizes = np.concatenate([c[3] for c in chunks])
+        result = []
+        _, first_idx = np.unique(hids, return_index=True)
+        for i in np.sort(first_idx):      # first-appearance order
+            h = int(hids[i])
+            sel = hids == h
+            cf, ct, sz = coefs[sel], consts[sel], sizes[sel]
+            bound = (int(np.abs(ct).max(initial=0))
+                     + nranks * int(np.abs(cf).max(initial=0))
+                     + int(np.abs(sz).max(initial=0)))
+            np_cols = (cf, ct, sz) if bound < _I64_SAFE else None
+            result.append((h, cf.tolist(), ct.tolist(), sz.tolist(),
+                           np_cols))
+        return result
+
+    def _span_cols_linear(self, u: int, targets: tuple):
+        """Linear symbolic replay of CFG ``u``'s full stream -- the
+        reference (and big-int / deep-grammar fallback) for
+        :meth:`_span_cols_walk`."""
         sigs = self._sigs
         runs: Dict[Any, Tuple[int, Optional[tuple]]] = {}
         order: List[int] = []
@@ -638,7 +922,6 @@ class TraceView:
                                np.asarray(consts, dtype=np.int64),
                                np.asarray(sizes, dtype=np.int64))
                 result.append((hid, coefs, consts, sizes, np_cols))
-        self._spancols[ck] = result
         return result
 
     def consistency_pairs(self, targets=_WRITE_FUNCS) -> List[Dict[str, Any]]:

@@ -1,3 +1,9 @@
-from .ops import delta_zigzag
+from .ops import (
+    delta_zigzag,
+    delta_zigzag_varint,
+    fit_columns,
+    uvarint_encode64,
+)
 
-__all__ = ["delta_zigzag"]
+__all__ = ["delta_zigzag", "delta_zigzag_varint", "fit_columns",
+           "uvarint_encode64"]

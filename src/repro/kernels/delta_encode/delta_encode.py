@@ -53,3 +53,174 @@ def delta_zigzag_pallas(ticks: jax.Array, *, block: int = 4096,
         scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
         interpret=interpret,
     )(ticks)
+
+
+# ---------------------------------------------------------------------------
+# fused delta -> zigzag -> varint (lengths + byte planes)
+# ---------------------------------------------------------------------------
+#
+# The variable-length total output size is data-dependent, so the kernel
+# cannot emit the packed stream directly (Pallas output shapes are static).
+# Instead it runs the per-element pass of the classic two-pass scheme:
+# per-element byte counts plus five "byte planes" (plane j = byte j of
+# every element, continuation bit already set).  The host half
+# (encode_backend._emit_varint_bytes) does the exclusive-scan offsets and
+# masked scatter -- pure vectorized numpy, no per-element Python.
+
+
+def _varint_planes(zz, len_ref, plane_ref, n_planes):
+    ln = jnp.ones(zz.shape, jnp.int32)
+    for k in range(1, n_planes):
+        ln = ln + (zz >= jnp.uint32(1 << (7 * k))).astype(jnp.int32)
+    len_ref[...] = ln
+    for j in range(n_planes):
+        b = (zz >> jnp.uint32(7 * j)).astype(jnp.uint32) & jnp.uint32(0x7F)
+        b = jnp.where(j < ln - 1, b | jnp.uint32(0x80), b)
+        plane_ref[j, :] = b.astype(jnp.int32)
+
+
+def _delta_varint_kernel(x_ref, zz_ref, len_ref, plane_ref, prev_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.int32)
+
+    @pl.when(i == 0)
+    def _first():
+        prev_ref[0] = jnp.array(0, jnp.int32)
+
+    prev = prev_ref[0]
+    shifted = jnp.concatenate([prev[None], x[:-1]])
+    first_mask = (i == 0) & (jax.lax.iota(jnp.int32, x.shape[0]) == 0)
+    delta = jnp.where(first_mask, x, x - shifted)
+    zz = ((delta << 1) ^ (delta >> 31)).astype(jnp.uint32)
+    zz_ref[...] = zz
+    prev_ref[0] = x[-1]
+    _varint_planes(zz, len_ref, plane_ref, 5)
+
+
+def delta_zigzag_varint_pallas(ticks: jax.Array, *, block: int = 4096,
+                               interpret: bool = False):
+    """Fused encode: flat u32 ticks -> (zigzag u32, varint byte counts,
+    (5, n) byte planes).  A u32 varint is at most 5 bytes."""
+    n = ticks.shape[0]
+    blk = min(block, n)
+    while n % blk:
+        blk -= 1
+    return pl.pallas_call(
+        _delta_varint_kernel,
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((5, blk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((5, n), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(ticks)
+
+
+def _uvarint64_kernel(lo_ref, hi_ref, len_ref, plane_ref):
+    # u64 values arrive as (lo, hi) u32 planes -- Pallas TPU has no i64
+    # lanes.  Byte j covers bits 7j..7j+6: for 7j < 32 that straddles the
+    # lo/hi boundary, above it reads hi alone.  A u64 varint is <= 10 bytes.
+    lo = lo_ref[...].astype(jnp.uint32)
+    hi = hi_ref[...].astype(jnp.uint32)
+    ln = jnp.ones(lo.shape, jnp.int32)
+    for k in range(1, 10):
+        s = 7 * k
+        if s < 32:
+            ge = (hi > 0) | (lo >= jnp.uint32(1 << s))
+        else:
+            ge = hi >= jnp.uint32(1 << (s - 32))
+        ln = ln + ge.astype(jnp.int32)
+    len_ref[...] = ln
+    for j in range(10):
+        s = 7 * j
+        if s == 0:
+            b = lo & jnp.uint32(0x7F)
+        elif s < 32:
+            b = ((lo >> jnp.uint32(s)) | (hi << jnp.uint32(32 - s))) \
+                & jnp.uint32(0x7F)
+        else:
+            b = (hi >> jnp.uint32(s - 32)) & jnp.uint32(0x7F)
+        b = jnp.where(j < ln - 1, b | jnp.uint32(0x80), b)
+        plane_ref[j, :] = b.astype(jnp.int32)
+
+
+def uvarint_encode64_pallas(lo: jax.Array, hi: jax.Array, *,
+                            block: int = 4096, interpret: bool = False):
+    """u64 values as (lo, hi) u32 arrays -> (byte counts, (10, n) byte
+    planes) for the host scatter.  Elementwise; blocks are independent."""
+    n = lo.shape[0]
+    blk = min(block, n)
+    while n % blk:
+        blk -= 1
+    return pl.pallas_call(
+        _uvarint64_kernel,
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((10, blk), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((10, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# rank-linear column classification (interprocess.batch_fit_columns)
+# ---------------------------------------------------------------------------
+#
+# A column fits the rank-linear model iff its first-order deltas are
+# constant -- the same delta core as the timestamp kernel, batched over
+# column tiles.  flag: 0 = no fit, 1 = constant, 2 = linear (nonzero
+# slope); d0 = the first delta (the slope when linear).
+
+
+def _fit_columns_kernel(v_ref, flag_ref, d0_ref):
+    v = v_ref[...]                                  # (blk, R) int32
+    d = v[:, 1:] - v[:, :-1]
+    const = (d == 0).all(axis=1)
+    linear = (d == d[:, :1]).all(axis=1) & (d[:, 0] != 0)
+    flag_ref[...] = jnp.where(const, 1,
+                              jnp.where(linear, 2, 0)).astype(jnp.int32)
+    d0_ref[...] = d[:, 0]
+
+
+def fit_columns_pallas(V: jax.Array, *, block: int = 256,
+                       interpret: bool = False):
+    """(C, R) int32 column matrix (R >= 2) -> per-column (flags, first
+    deltas) in one pallas_call over padded column tiles.  Rows are padded
+    to a block multiple with zeros (classified constant; callers slice)."""
+    c, r = V.shape
+    blk = min(block, c)
+    pad = (-c) % blk
+    if pad:
+        V = jnp.concatenate([V, jnp.zeros((pad, r), V.dtype)], axis=0)
+    cp = c + pad
+    return pl.pallas_call(
+        _fit_columns_kernel,
+        grid=(cp // blk,),
+        in_specs=[pl.BlockSpec((blk, r), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cp,), jnp.int32),
+            jax.ShapeDtypeStruct((cp,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(V)

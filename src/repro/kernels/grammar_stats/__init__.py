@@ -1,0 +1,3 @@
+from .ops import digram_codes, histogram, row_boundaries
+
+__all__ = ["digram_codes", "histogram", "row_boundaries"]

@@ -1,0 +1,130 @@
+"""Symbol-stream statistics kernels (Sequitur / TraceView, ROADMAP dir. 2+4).
+
+Three blocked passes over expanded symbol streams:
+
+- ``row_boundaries``: row-change mask of an (n, k) matrix, the shared core
+  of ``interprocess.arith_segments`` (over row diffs: a new arithmetic run
+  starts where the diff row changes) and ``Sequitur.push_stream`` RLE
+  pre-tokenization (over the raw terminal column: run starts).  VMEM
+  scratch carries the previous block's last row so cross-block comparisons
+  are exact.
+- ``histogram``: terminal occurrence counts via a blocked one-hot
+  accumulate into a single output tile (grid is sequential on TPU, so
+  ``o_ref[...] +=`` across blocks is well-defined).
+- ``digram_codes``: directly-follows pair codes ``prev * T + cur`` with a
+  cross-block carry of the previous element; the host bincounts the codes
+  into the digram histogram that seeds the DFG analyses.
+
+All int32: symbol ids and diffs fit comfortably (callers guard and fall
+back to numpy otherwise).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _boundary_kernel(x_ref, o_ref, prev_ref):
+    i = pl.program_id(0)
+    x = x_ref[...]                                   # (blk, k) int32
+
+    @pl.when(i == 0)
+    def _first():
+        prev_ref[...] = x[0]                         # row 0 forced below
+
+    prev = prev_ref[...]
+    shifted = jnp.concatenate([prev[None, :], x[:-1]], axis=0)
+    diff = (x != shifted).any(axis=1)
+    first_mask = (i == 0) & (jax.lax.iota(jnp.int32, x.shape[0]) == 0)
+    o_ref[...] = (diff | first_mask).astype(jnp.int32)
+    prev_ref[...] = x[-1]
+
+
+def row_boundaries_pallas(V: jax.Array, *, block: int = 4096,
+                          interpret: bool = False) -> jax.Array:
+    """(n, k) int32 matrix -> int32 mask, 1 where row i != row i-1
+    (position 0 always 1)."""
+    n, k = V.shape
+    blk = min(block, n)
+    while n % blk:
+        blk -= 1
+    return pl.pallas_call(
+        _boundary_kernel,
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((k,), jnp.int32)],
+        interpret=interpret,
+    )(V)
+
+
+def _hist_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                   # (blk,) int32
+    bins = jax.lax.iota(jnp.int32, o_ref.shape[0])
+    o_ref[...] += (x[None, :] == bins[:, None]).astype(jnp.int32).sum(axis=1)
+
+
+def histogram_pallas(stream: jax.Array, n_bins: int, *, block: int = 4096,
+                     interpret: bool = False) -> jax.Array:
+    """Flat int32 stream -> (n_bins,) occurrence counts (values outside
+    [0, n_bins) are ignored)."""
+    n = stream.shape[0]
+    blk = min(block, n)
+    while n % blk:
+        blk -= 1
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
+        interpret=interpret,
+    )(stream)
+
+
+def _digram_kernel(x_ref, o_ref, prev_ref, *, n_terminals: int):
+    i = pl.program_id(0)
+    x = x_ref[...]                                   # (blk,) int32
+
+    @pl.when(i == 0)
+    def _first():
+        prev_ref[0] = x[0]
+
+    prev = prev_ref[0]
+    shifted = jnp.concatenate([prev[None], x[:-1]])
+    codes = shifted * jnp.int32(n_terminals) + x
+    first_mask = (i == 0) & (jax.lax.iota(jnp.int32, x.shape[0]) == 0)
+    o_ref[...] = jnp.where(first_mask, jnp.int32(-1), codes)
+    prev_ref[0] = x[-1]
+
+
+def digram_codes_pallas(stream: jax.Array, n_terminals: int, *,
+                        block: int = 4096,
+                        interpret: bool = False) -> jax.Array:
+    """Flat int32 terminal stream -> pair codes ``prev * T + cur``
+    (position 0, which has no predecessor, yields -1)."""
+    n = stream.shape[0]
+    blk = min(block, n)
+    while n % blk:
+        blk -= 1
+    return pl.pallas_call(
+        partial(_digram_kernel, n_terminals=n_terminals),
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(stream)

@@ -1,0 +1,32 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .grammar_stats import (
+    digram_codes_pallas,
+    histogram_pallas,
+    row_boundaries_pallas,
+)
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def row_boundaries(V, *, block: int = 4096, interpret: bool = False):
+    """(n, k) int32 matrix -> int32 row-change mask (position 0 = 1)."""
+    return row_boundaries_pallas(V, block=block, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("n_bins", "block", "interpret"))
+def histogram(stream, n_bins: int, *, block: int = 4096,
+              interpret: bool = False):
+    """Flat int32 stream -> (n_bins,) occurrence counts."""
+    return histogram_pallas(stream, n_bins, block=block, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("n_terminals", "block", "interpret"))
+def digram_codes(stream, n_terminals: int, *, block: int = 4096,
+                 interpret: bool = False):
+    """Flat int32 stream -> directly-follows pair codes (first = -1)."""
+    return digram_codes_pallas(stream, n_terminals, block=block,
+                               interpret=interpret)

@@ -1,0 +1,31 @@
+"""Numpy oracles for the grammar_stats kernels."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def row_boundaries_ref(V: np.ndarray) -> np.ndarray:
+    V = np.asarray(V)
+    if V.ndim == 1:
+        V = V[:, None]
+    mask = np.empty(V.shape[0], np.int32)
+    if V.shape[0]:
+        mask[0] = 1
+        mask[1:] = (V[1:] != V[:-1]).any(axis=1)
+    return mask
+
+
+def histogram_ref(stream: np.ndarray, n_bins: int) -> np.ndarray:
+    s = np.asarray(stream, np.int64).reshape(-1)
+    s = s[(s >= 0) & (s < n_bins)]
+    return np.bincount(s, minlength=n_bins)[:n_bins].astype(np.int32)
+
+
+def digram_codes_ref(stream: np.ndarray, n_terminals: int) -> np.ndarray:
+    s = np.asarray(stream, np.int64).reshape(-1)
+    out = np.empty(s.shape[0], np.int32)
+    if s.shape[0]:
+        out[0] = -1
+        out[1:] = s[:-1] * n_terminals + s[1:]
+    return out
