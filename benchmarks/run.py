@@ -15,7 +15,7 @@ import time
 def main() -> None:
     fast = "--fast" in sys.argv
     from . import flash_scaling, ior_pattern, kernel_bench, overhead, \
-        streaming_flush, tool_comparison
+        streaming_flush, tool_comparison, trace_service
 
     # reader_scaling is intentionally NOT in this list: CI runs it as its
     # own `python -m benchmarks.reader_scaling --smoke` step (and the full
@@ -29,6 +29,7 @@ def main() -> None:
                       ("tool_comparison", tool_comparison),
                       ("overhead", overhead),
                       ("streaming_flush", streaming_flush),
+                      ("trace_service", trace_service),
                       ("kernel_bench", kernel_bench)):
         t0 = time.time()
         try:

@@ -1,0 +1,227 @@
+"""Trace query service under live load: latency, throughput, staleness.
+
+Drives the always-on service (``repro.traceserve``) the way a cluster
+monitoring dashboard would: J jobs each keep committing epoch segments
+while C client threads hammer the service with a mixed query workload
+(``io_summary``, ``size_histogram``, ``n_records``, ``call_chains``,
+``digram_counts``, ``overlap_ratio``), every query demanding a fresh
+snapshot (``max_staleness_s=0``, so each one pays the refresh check).
+
+What must hold -- the incremental-service contract:
+
+  * **fold accounting is exact**: serving E epochs costs exactly E - 1
+    incremental segment folds per job after the initial build (one per
+    committed epoch; never a rebuild, never a rescan of loaded epochs),
+  * **query latency stays ~flat as epochs accumulate**: the per-epoch
+    median over all concurrent clients may not grow past ``FLAT_FACTOR``
+    x the early-epoch median plus an absolute slack -- a service that
+    re-stitched history on refresh would grow linearly,
+  * **staleness is bounded by the refresh path**: the observed
+    commit-to-visible delay on a polled job stays under
+    ``STALENESS_BUDGET_S`` (it is one manifest read + one segment fold,
+    not a function of history length).
+
+Writes artifacts/bench/trace_service.json:
+  {"config": ..., "epochs": [{epoch, p50_s, p99_s, qps, staleness_s}...],
+   "overall": {p50_s, p99_s, queries, folds, ...}}
+
+    PYTHONPATH=src python -m benchmarks.trace_service [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import shutil
+import sys
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+from repro.traceserve import TraceService
+import repro.core.apis  # noqa: F401  (populate registry)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+FLAT_FACTOR = 4.0     # late-epoch p50 may cost at most this x early p50
+ABS_SLACK_S = 0.010   # plus this much absolute noise allowance
+STALENESS_BUDGET_S = 2.0
+
+_MIX = ("io_summary", "size_histogram", "n_records", "call_chains",
+        "digram_counts", "overlap_ratio")
+
+
+def _feed_epoch(rec: Recorder, rng: random.Random, epoch: int,
+                calls: int) -> None:
+    fids = {n: REGISTRY.id_of(n) for n in ("pwrite", "lseek", "write")}
+    t = epoch * calls * 2
+    fd = "fd-0"
+    if epoch == 0:
+        rec.record(REGISTRY.id_of("open"), ("/data/f.bin", 2, 438), fd,
+                   0, t, t + 1)
+        t += 2
+    for i in range(calls):
+        kind = rng.random()
+        if kind < 0.6:
+            off = (epoch * calls + i) * 4096
+            rec.record(fids["pwrite"], (fd, b"x" * 4096, off), 4096,
+                       0, t, t + 1)
+        elif kind < 0.8:
+            rec.record(fids["lseek"], (fd, i * 256, 0), i * 256, 0, t, t + 1)
+        else:
+            rec.record(fids["write"], (fd, b"z" * 128), 128, 0, t, t + 1)
+        t += 2
+
+
+def _pct(xs: List[float], q: float) -> float:
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(q * len(s)))] if s else 0.0
+
+
+def _burst(svc: TraceService, jobs: List[str], clients: int,
+           per_client: int, seed: int) -> List[float]:
+    """One concurrent query burst; returns every query's latency."""
+    lat: List[float] = []
+    lock = threading.Lock()
+
+    def client(cid: int) -> None:
+        rng = random.Random(seed * 1000 + cid)
+        mine: List[float] = []
+        for _ in range(per_client):
+            job = rng.choice(jobs)
+            fam = rng.choice(_MIX)
+            t0 = time.perf_counter()
+            svc.query(job, fam, max_staleness_s=0.0)
+            mine.append(time.perf_counter() - t0)
+        with lock:
+            lat.extend(mine)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    return lat
+
+
+def run(n_jobs: int, epochs: int, clients: int, per_client: int,
+        calls_per_epoch: int) -> Dict:
+    root = tempfile.mkdtemp(prefix="trace_service_bench_")
+    try:
+        recs = []
+        for j in range(n_jobs):
+            rec = Recorder(rank=0, config=RecorderConfig(
+                trace_dir=os.path.join(root, f"job_{j:02d}")))
+            _feed_epoch(rec, random.Random(j), 0, calls_per_epoch)
+            rec.flush()
+            recs.append(rec)
+        jobs = [f"job_{j:02d}" for j in range(n_jobs)]
+
+        svc = TraceService(root, max_staleness_s=0.0, workers=clients)
+        for job in jobs:  # build every view on epoch 0: folds are pure delta
+            svc.query(job, "n_records")
+        rows = []
+        all_lat: List[float] = []
+        for e in range(1, epochs):
+            for j, rec in enumerate(recs):
+                _feed_epoch(rec, random.Random(100 * e + j), e,
+                            calls_per_epoch)
+                rec.flush()
+            # observed staleness on one polled job: commit-to-visible
+            want = (e + 1) * calls_per_epoch + 1  # +1: the epoch-0 open
+            t_commit = time.perf_counter()
+            while True:
+                res = svc.query(jobs[0], "n_records", max_staleness_s=0.0)
+                if res.value["total"] >= want:
+                    break
+            staleness = time.perf_counter() - t_commit
+            t0 = time.perf_counter()
+            lat = _burst(svc, jobs, clients, per_client, seed=e)
+            wall = time.perf_counter() - t0
+            all_lat.extend(lat)
+            rows.append({
+                "epoch": e, "n_queries": len(lat),
+                "p50_s": _pct(lat, 0.50), "p99_s": _pct(lat, 0.99),
+                "qps": len(lat) / max(wall, 1e-9),
+                "staleness_s": staleness,
+            })
+        stats = svc.stats()
+        # correctness spot check before teardown: full-history totals
+        for j, job in enumerate(jobs):
+            got = svc.query(job, "n_records").value["total"]
+            assert got == epochs * calls_per_epoch + 1, (job, got)
+        svc.close()
+        p50s = [r["p50_s"] for r in rows]
+        overall = {
+            "queries": len(all_lat),
+            "p50_s": _pct(all_lat, 0.50),
+            "p99_s": _pct(all_lat, 0.99),
+            "qps_mean": sum(r["qps"] for r in rows) / len(rows),
+            "staleness_max_s": max(r["staleness_s"] for r in rows),
+            "early_p50_s": min(p50s[:3]),
+            "late_p50_s": min(p50s[-3:]),
+            "folds": stats["cache"]["segment_folds"],
+            "view_builds": stats["cache"]["view_builds"],
+            "expected_folds": n_jobs * (epochs - 1),
+        }
+        overall["latency_flat"] = (
+            overall["late_p50_s"]
+            <= FLAT_FACTOR * overall["early_p50_s"] + ABS_SLACK_S)
+        return {"rows": rows, "overall": overall}
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def main(fast: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    if fast:
+        n_jobs, epochs, clients, per_client, calls = 3, 6, 3, 20, 60
+    else:
+        n_jobs, epochs, clients, per_client, calls = 6, 12, 4, 40, 150
+    out = run(n_jobs, epochs, clients, per_client, calls)
+    out["config"] = {
+        "fast": fast, "n_jobs": n_jobs, "epochs": epochs,
+        "clients": clients, "per_client": per_client,
+        "calls_per_epoch": calls, "flat_factor": FLAT_FACTOR,
+        "abs_slack_s": ABS_SLACK_S,
+        "staleness_budget_s": STALENESS_BUDGET_S,
+    }
+    with open(os.path.join(ART, "trace_service.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    ov = out["overall"]
+    lines = [
+        f"trace_service,jobs={n_jobs},epochs={epochs},clients={clients},"
+        f"queries={ov['queries']},p50_s={ov['p50_s']:.5f},"
+        f"p99_s={ov['p99_s']:.5f},qps={ov['qps_mean']:.0f}",
+        f"trace_service,early_p50_s={ov['early_p50_s']:.5f},"
+        f"late_p50_s={ov['late_p50_s']:.5f},flat={ov['latency_flat']},"
+        f"staleness_max_s={ov['staleness_max_s']:.4f}",
+        f"trace_service,folds={ov['folds']},"
+        f"expected={ov['expected_folds']},builds={ov['view_builds']}",
+    ]
+    assert ov["folds"] == ov["expected_folds"], (
+        f"incremental fold accounting broke: {ov['folds']} segment folds "
+        f"for {ov['expected_folds']} committed epochs -- the service "
+        f"re-read or re-built instead of folding per segment")
+    assert ov["view_builds"] == n_jobs, (
+        f"{ov['view_builds']} view builds for {n_jobs} jobs -- cached "
+        f"views were rebuilt instead of refreshed")
+    assert ov["latency_flat"], (
+        f"query p50 grew {ov['late_p50_s'] / max(ov['early_p50_s'], 1e-9):.1f}x "
+        f"from early to late epochs -- per-query cost is no longer "
+        f"independent of accumulated history")
+    assert ov["staleness_max_s"] <= STALENESS_BUDGET_S, (
+        f"observed commit-to-visible staleness "
+        f"{ov['staleness_max_s']:.3f}s exceeded the "
+        f"{STALENESS_BUDGET_S}s budget")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main(fast="--smoke" in sys.argv or "--fast" in sys.argv):
+        print(line)

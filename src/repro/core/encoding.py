@@ -403,3 +403,18 @@ def decode_signatures_batch(sigs: Sequence[bytes]) -> SignatureColumns:
                             depth=heads[:, 2].copy(),
                             nargs=heads[:, 3].copy(),
                             args=args_col, ret=ret_col)
+
+
+def concat_signature_columns(a: SignatureColumns,
+                             b: SignatureColumns) -> SignatureColumns:
+    """Row-wise concatenation of two column sets (incremental reader
+    refresh: the already-decoded prefix is reused, only the new segments'
+    entries are decoded and appended).  Equal to decoding the concatenated
+    signature list in one shot."""
+    return SignatureColumns(
+        func_id=np.concatenate([a.func_id, b.func_id]),
+        thread=np.concatenate([a.thread, b.thread]),
+        depth=np.concatenate([a.depth, b.depth]),
+        nargs=np.concatenate([a.nargs, b.nargs]),
+        args=a.args + b.args,
+        ret=a.ret + b.ret)

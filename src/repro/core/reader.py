@@ -42,7 +42,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from . import streaming, trace_format
 from .encoding import IterPattern, RankPattern
-from .sequitur import parse_grammar
+from .sequitur import concat_grammars, parse_grammar
 from .trace_format import TraceFormatError, read_trace_files
 
 
@@ -81,11 +81,21 @@ class TraceReader:
         if mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
         self.mode = mode
+        self.trace_dir = trace_dir
         self.skipped: List[Dict[str, str]] = []
         # degraded (rank-failure) epochs this reader serves: segment name ->
         # sorted ranks whose contribution made it into that epoch
         self.degraded_epochs: Dict[str, List[int]] = {}
         self.n_segments = 1
+        # refresh bookkeeping: what this reader currently serves
+        # ("single" | "merged" | "stitched" | "tail"), the highest epoch
+        # number consumed (committed OR skipped), the serialized stitched
+        # CFGs (the incremental fold splices new epochs onto them), and
+        # the newest segment name a tail reader serves
+        self._serving = "single"
+        self._epoch_high = -1
+        self._unique_bytes: List[bytes] = []
+        self._tail_name: Optional[str] = None
         if trace_format.is_stream_dir(trace_dir):
             self._init_stream(trace_dir, mode)
         else:
@@ -126,13 +136,23 @@ class TraceReader:
         manifest = trace_format.read_manifest(trace_dir)
         entries = manifest.get("segments", [])
         trace_format.check_segment_versions(trace_dir, entries)
+        if entries:
+            self._epoch_high = max(e["epoch"] for e in entries)
         merged_entry = manifest.get("merged")
         if mode in ("auto", "merged") and merged_entry is not None:
             reason = trace_format.validate_segment(trace_dir, merged_entry)
             if reason is None:
-                self._init_single(read_trace_files(
-                    os.path.join(trace_dir, merged_entry["name"])))
-                return
+                try:
+                    self._init_single(read_trace_files(
+                        os.path.join(trace_dir, merged_entry["name"])))
+                    self._serving = "merged"
+                    return
+                except (TraceFormatError, ValueError, IndexError,
+                        OSError) as e:
+                    # validate-then-read race: a concurrent writer may pop
+                    # and reclaim the stale merged trace while committing
+                    # a new epoch -- fall back to the segments
+                    reason = (f"{merged_entry['name']} is unreadable: {e}")
             if mode == "merged":
                 raise TraceFormatError(
                     f"merged trace of {trace_dir!r} is unusable: {reason}")
@@ -150,6 +170,7 @@ class TraceReader:
                 data = self._read_segment(trace_dir, entry)
                 if data is not None:
                     datas = [data]
+                    self._tail_name = entry["name"]
                     if "ranks_present" in entry:
                         self.degraded_epochs[entry["name"]] = \
                             list(entry["ranks_present"])
@@ -171,10 +192,12 @@ class TraceReader:
         st = streaming.stitch_segments(datas)
         self.meta = st["meta"]
         self.merged_cst = st["merged_cst"]
+        self._unique_bytes = st["unique_cfgs"]
         self.unique_cfgs = [parse_grammar(c) for c in st["unique_cfgs"]]
         self.cfg_index = st["cfg_index"]
         self.ts_store = st["ts_store"]
         self.n_segments = st["n_segments"]
+        self._serving = "tail" if mode == "tail" else "stitched"
 
     @property
     def degraded(self) -> bool:
@@ -208,6 +231,130 @@ class TraceReader:
             "ranks_partial": self.ranks_partial,
             "skipped": list(self.skipped),
         }
+
+    def refresh(self) -> int:
+        """Fold newly committed epoch segments into this reader WITHOUT
+        reconstructing it; returns the number of segments folded.
+
+        The incremental path (stitched serving) is O(delta): only the new
+        segments are read and decoded, their CSTs appended, each rank's
+        CFG spliced via :func:`sequitur.concat_grammars`, and -- when a
+        view had been built -- its per-unique-CFG memos folded forward
+        (:func:`traceview.refreshed_view`), so one new epoch costs one
+        segment fold, never a rescan of already-loaded segments.  A tail
+        reader re-reads only the (one) newest intact segment when it
+        changed; an auto reader that had been serving a merged trace
+        superseded by new epochs falls back to a full stitched build once.
+
+        Previously handed-out :meth:`view` objects keep serving the
+        snapshot they were built from; :meth:`view` after a refresh serves
+        the updated trace.  Not safe to call concurrently with attribute
+        access on this reader itself -- callers that share a reader across
+        threads (the trace service cache) serialize refreshes and query
+        the snapshot views.
+        """
+        if self._serving == "single":
+            return 0  # plain single-segment trace: immutable once written
+        manifest = trace_format.read_manifest(self.trace_dir)
+        entries = manifest.get("segments", [])
+        if self._serving == "merged":
+            if manifest.get("merged") is not None:
+                return 0  # still finalized: the merged trace covers all
+            if self.mode == "merged":
+                raise TraceFormatError(
+                    f"merged trace of {self.trace_dir!r} was superseded by "
+                    f"newly committed epochs (the run restarted); reopen "
+                    f"with mode='auto' or 'stitched'")
+            self._reinit()
+            return self.n_segments
+        new_entries = [e for e in entries if e["epoch"] > self._epoch_high]
+        if not new_entries:
+            return 0
+        trace_format.check_segment_versions(self.trace_dir, new_entries)
+        if self._serving == "tail":
+            old_name = self._tail_name
+            self._epoch_high = max(e["epoch"] for e in new_entries)
+            self._reinit()
+            return 0 if self._tail_name == old_name else 1
+        folds = []
+        for entry in new_entries:
+            self._epoch_high = entry["epoch"]
+            data = self._read_segment(self.trace_dir, entry)
+            if data is None:
+                continue  # reported in self.skipped; never retried
+            if data["meta"]["nranks"] != self.nranks:
+                raise TraceFormatError(
+                    f"segment {entry['name']} covers "
+                    f"{data['meta']['nranks']} ranks, this reader serves "
+                    f"{self.nranks}")
+            folds.append(self._fold_segment(entry, data))
+        if not folds:
+            return 0
+        self.functions = {int(k): v
+                         for k, v in self.meta["functions"].items()}
+        if self._view is not None:
+            from .traceview import refreshed_view
+            self._view = refreshed_view(self._view, self, folds)
+        return len(folds)
+
+    def _fold_segment(self, entry: Dict[str, Any],
+                      data: Dict[str, Any]) -> tuple:
+        """Splice ONE newly committed segment onto the stitched state.
+
+        Every container is REPLACED, never mutated in place, so views
+        built before the fold keep consistent references to the old state.
+        Returns the ``(data, toff, pairs, seg_store)`` fold record
+        :func:`traceview.refreshed_view` consumes.
+        """
+        toff = len(self.merged_cst)
+        seg_store = streaming.make_ts_store(data)
+        pair_table: Dict[tuple, int] = {}
+        new_bytes: List[bytes] = []
+        new_parsed = []
+        pairs: List[tuple] = []
+        new_index: List[int] = []
+        for r in range(self.nranks):
+            key = (self.cfg_index[r], data["cfg_index"][r])
+            i = pair_table.get(key)
+            if i is None:
+                i = len(new_bytes)
+                pair_table[key] = i
+                cat = concat_grammars(
+                    [(self._unique_bytes[key[0]], 0),
+                     (data["unique_cfgs"][key[1]], toff)])
+                new_bytes.append(cat)
+                new_parsed.append(parse_grammar(cat))
+                pairs.append(key)
+            new_index.append(i)
+        self.merged_cst = self.merged_cst + list(data["merged_cst"])
+        self._unique_bytes = new_bytes
+        self.unique_cfgs = new_parsed
+        self.cfg_index = new_index
+        self.ts_store = streaming.StitchedTimestampStore(
+            list(self.ts_store._stores) + [seg_store])
+        meta = dict(data["meta"])  # newest segment: superset function table
+        meta["nranks"] = self.nranks
+        self.meta = meta
+        self.n_segments += 1
+        if "ranks_present" in entry:
+            self.degraded_epochs = {**self.degraded_epochs,
+                                    entry["name"]:
+                                        list(entry["ranks_present"])}
+        return (data, toff, pairs, seg_store)
+
+    def _reinit(self) -> None:
+        """Full re-open in place (tail advance, merged -> stitched
+        fallback): cheap for tail (one segment), one-time for the merged
+        transition."""
+        self.skipped = []
+        self.degraded_epochs = {}
+        self.n_segments = 1
+        self._tail_name = None
+        self._init_stream(self.trace_dir, self.mode)
+        self.functions = {int(k): v
+                         for k, v in self.meta["functions"].items()}
+        self.nranks = self.meta["nranks"]
+        self._view = None
 
     def view(self) -> "TraceView":  # noqa: F821  (lazy import below)
         """The compressed-domain columnar query API over this trace

@@ -440,7 +440,12 @@ class Recorder:
     # -- streaming epoch flushes (core/streaming.py) --------------------------
 
     def _is_streaming(self) -> bool:
+        # an in-flight (or failed-but-unreaped) background commit counts:
+        # finalize must take the streaming path and drain it even when a
+        # failure's _restore_epoch already rolled the epoch counter back
         return (self.epoch > 0
+                or self._inflight is not None
+                or self._async_error is not None
                 or self.config.flush_every_n_records is not None
                 or self.config.flush_interval_s is not None)
 

@@ -319,9 +319,13 @@ def validate_segment(trace_dir: str, entry: Dict[str, Any]) -> Optional[str]:
         return f"segment directory {entry['name']!r} is missing"
     for fname, want in entry.get("files", {}).items():
         path = os.path.join(seg_dir, fname)
-        if not os.path.exists(path):
+        try:
+            got = os.path.getsize(path)
+        except OSError:
+            # the segment can vanish between the manifest read and this
+            # stat (retention pruning under a live reader): report it as
+            # skippable, never let the race escape as FileNotFoundError
             return f"{entry['name']}/{fname} is missing"
-        got = os.path.getsize(path)
         if got != want:
             return (f"{entry['name']}/{fname} is {got} bytes, manifest "
                     f"recorded {want} (truncated or corrupt)")
@@ -372,7 +376,10 @@ def load_segment(trace_dir: str, entry: Dict[str, Any]
         try:
             return read_trace_files(os.path.join(trace_dir,
                                                  entry["name"])), None
-        except (TraceFormatError, ValueError, IndexError) as e:
+        except (TraceFormatError, ValueError, IndexError, OSError) as e:
+            # OSError covers the validate-then-read race: a concurrent
+            # pruner may delete the segment directory between the size/CRC
+            # check and the blob reads
             reason = f"{entry['name']} is unreadable: {e}"
     return None, reason
 

@@ -46,11 +46,11 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .encoding import (Handle, IterPattern, RankPattern,
-                       decode_signatures_batch)
+                       concat_signature_columns, decode_signatures_batch)
 from .patterns import IntraPatternDecoder
 from .reader import Record, _resolve_rank
 from .sequitur import (_topo_order, expand_grammar, expand_grammar_reversed,
-                       terminal_counts, terminal_positions)
+                       parse_grammar, terminal_counts, terminal_positions)
 from .specs import DATA_FUNCS
 from .timestamps import effective_exit
 
@@ -154,6 +154,165 @@ class _SigInfo:
         self.enc: Optional[tuple] = None
 
 
+def make_sig_info(cols, functions: Dict[int, Dict[str, Any]],
+                  t: int) -> _SigInfo:
+    """Derived metadata of CST entry ``t`` from decoded columns -- the one
+    definition site shared by full view construction and the incremental
+    refresh path (which derives it only for NEW entries)."""
+    finfo = functions[int(cols.func_id[t])]
+    args, ret = cols.args[t], cols.ret[t]
+    roles = finfo["arg_roles"]
+    s = _SigInfo()
+    s.name = finfo["name"]
+    s.layer = finfo["layer"]
+    s.is_data = s.name in _DATA_FUNCS
+    s.is_io_layer = s.layer in _IO_LAYERS
+    # _size_of: first BUF/SIZE int arg, else int return, else 0
+    size = None
+    for v, role in zip(args, roles):
+        if role in ("buf", "size") and isinstance(v, int):
+            size = v
+            break
+    ret_is_offset = (finfo["ret_role"] == "offset"
+                     and isinstance(ret, (int, IterPattern, RankPattern)))
+    s.size = size if size is not None else (
+        ret if isinstance(ret, int) else 0)
+    # a size that would come from a pattern-coded return cannot be read
+    # off the signature alone (it depends on the run index / rank)
+    s.size_symbolic = size is None and ret_is_offset \
+        and not isinstance(ret, int)
+    s.handle = next((v.id for v, role in zip(args, roles)
+                     if role == "handle" and hasattr(v, "id")), _NO_HANDLE)
+    off_slots = [j for j, r in enumerate(roles)
+                 if r == "offset" and j < len(args)]
+    if off_slots or ret_is_offset:
+        key = _derive_key(int(cols.func_id[t]), int(cols.thread[t]),
+                          args, ret, roles, ret_is_offset)
+        enc = [args[j] for j in off_slots]
+        if ret_is_offset:
+            enc.append(ret)
+        patsig = tuple((v.a, v.b) if isinstance(v, IterPattern) else v
+                       for v in enc)
+        has_iter = any(isinstance(v, IterPattern) for v in enc)
+        # run-key components are never offset-fitted, so a RankPattern
+        # in them would make run identity rank-dependent (guarded)
+        key_rankdep = (_contains_rankpattern(key[3])
+                       or _contains_rankpattern(key[4]))
+        s.enc = (key, tuple(enc), patsig, has_iter, off_slots,
+                 ret_is_offset, key_rankdep)
+    return s
+
+
+def per_file_fold(rules: List[List[Tuple[int, int]]], sigs, cols,
+                  live0: Dict[int, str], toff: int = 0
+                  ) -> Tuple[Dict[Any, Tuple[int, int]], Dict[int, str]]:
+    """Per-file attribution of ONE grammar's stream as a resumable fold.
+
+    Evaluates ``rules`` (terminal ids local to the grammar, offset by
+    ``toff`` into ``sigs``/``cols``) under ENTRY handle->path bindings
+    ``live0`` and returns ``(contrib, exit_live)`` where ``contrib`` maps
+    file key -> ``(bytes, calls)`` and ``exit_live`` is the binding state
+    after the whole stream.  This makes per-file attribution composable
+    across epoch segments: fold segment k+1 with segment k's exit state
+    and add the contributions -- the incremental-refresh path never
+    replays already-folded segments.
+
+    Same rule/read-set memo walk as the PR 8 sublinear path (a rule's
+    contribution depends only on the live bindings of the handles its
+    subtree reads; idempotent state updates collapse exponents in closed
+    form).  Raises RecursionError on pathologically deep grammars --
+    callers fall back to :func:`per_file_fold_linear`.
+    """
+    n = len(rules)
+    # static per-rule summaries, children before parents: the handles a
+    # rule's subtree attributes data calls to (its read set) and its net
+    # handle->path state update (constant strings -> idempotent)
+    reads: List[set] = [set() for _ in range(n)]
+    upd: List[Dict[int, str]] = [{} for _ in range(n)]
+    for i in reversed(_topo_order(rules)):
+        rd: set = set()
+        up: Dict[int, str] = {}
+        for code, _exp in rules[i]:
+            x = code >> 1
+            if code & 1:
+                rd |= reads[x]
+                up.update(upd[x])
+            else:
+                s = sigs[x + toff]
+                if s.is_data and s.handle is not _NO_HANDLE:
+                    rd.add(s.handle)
+                if s.name in _OPEN_FUNCS and hasattr(cols.ret[x + toff],
+                                                     "id"):
+                    up[cols.ret[x + toff].id] = str(cols.args[x + toff][0])
+        reads[i] = rd
+        upd[i] = up
+
+    live: Dict[int, str] = dict(live0)
+    memo: Dict[tuple, Dict[Any, Tuple[int, int]]] = {}
+
+    def add(dst: Dict[Any, Tuple[int, int]],
+            src: Dict[Any, Tuple[int, int]], mult: int) -> None:
+        for k, (b, c) in src.items():
+            ob, oc = dst.get(k, (0, 0))
+            dst[k] = (ob + mult * b, oc + mult * c)
+
+    def walk(rid: int) -> Dict[Any, Tuple[int, int]]:
+        rkey = (rid,) + tuple((h, live.get(h))
+                              for h in sorted(reads[rid]))
+        hit = memo.get(rkey)
+        if hit is not None:
+            live.update(upd[rid])
+            return hit
+        contrib: Dict[Any, Tuple[int, int]] = {}
+        for code, exp in rules[rid]:
+            x = code >> 1
+            if code & 1:
+                add(contrib, walk(x), 1)
+                if exp > 1:
+                    # state after app 1 is a fixed point: apps 2..exp
+                    # all see the same entry state and contribute alike
+                    add(contrib, walk(x), exp - 1)
+            else:
+                s = sigs[x + toff]
+                if s.name in _OPEN_FUNCS and hasattr(cols.ret[x + toff],
+                                                     "id"):
+                    live[cols.ret[x + toff].id] = str(cols.args[x + toff][0])
+                if s.is_data:
+                    k = "?" if s.handle is _NO_HANDLE \
+                        else live.get(s.handle)
+                    ob, oc = contrib.get(k, (0, 0))
+                    contrib[k] = (ob + exp * s.size, oc + exp)
+        memo[rkey] = contrib
+        return contrib
+
+    res = walk(0) if rules else {}
+    return res, live
+
+
+def per_file_fold_linear(rules: List[List[Tuple[int, int]]], sigs, cols,
+                         live0: Dict[int, str], toff: int = 0
+                         ) -> Tuple[Dict[Any, Tuple[int, int]],
+                                    Dict[int, str]]:
+    """Linear-stream reference (and deep-grammar fallback) for
+    :func:`per_file_fold`: one walk of the expanded stream."""
+    handles: Dict[int, str] = dict(live0)
+    per: Dict[Any, Tuple[int, int]] = {}
+    for t in expand_grammar(rules):
+        s = sigs[t + toff]
+        if s.name in _OPEN_FUNCS and hasattr(cols.ret[t + toff], "id"):
+            handles[cols.ret[t + toff].id] = str(cols.args[t + toff][0])
+        if s.is_data:
+            key = "?" if s.handle is _NO_HANDLE else handles.get(s.handle)
+            b, c = per.get(key, (0, 0))
+            per[key] = (b + s.size, c + 1)
+    return per, handles
+
+
+def _contrib_dicts(contrib: Dict[Any, Tuple[int, int]]
+                   ) -> Dict[Any, Dict[str, int]]:
+    return {k: {"bytes": b, "calls": c} for k, (b, c) in contrib.items()}
+
+
 class TraceView:
     """Columnar, compressed-domain query API over one trace directory.
 
@@ -165,7 +324,8 @@ class TraceView:
     that the ``TraceReader`` shims delegate to.
     """
 
-    def __init__(self, reader) -> None:
+    def __init__(self, reader,
+                 _reuse: Optional[Dict[str, Any]] = None) -> None:
         if getattr(reader, "degraded", False):
             cov = reader.coverage()
             warnings.warn(
@@ -180,66 +340,44 @@ class TraceView:
         self.functions: Dict[int, Dict[str, Any]] = reader.functions
         self.grammars = reader.unique_cfgs
         self.cfg_index: List[int] = reader.cfg_index
-        self.columns = decode_signatures_batch(reader.merged_cst)
-        self._sigs = [self._sig_info(t) for t in range(len(self.columns))]
+        # the timestamp store is CAPTURED at build time: a later
+        # `reader.refresh()` swaps the reader's store, but this view keeps
+        # serving the snapshot it was built from (generation safety)
+        self._ts_store = reader.ts_store
+        if _reuse is None:
+            self.columns = decode_signatures_batch(reader.merged_cst)
+            self._sigs = [self._sig_info(t)
+                          for t in range(len(self.columns))]
+            self._counts: Dict[int, Dict[int, int]] = {}
+            self._positions: Dict[int, Tuple[Dict[int, int],
+                                             Dict[int, int]]] = {}
+            self._pfstate: Dict[int, Tuple[Dict[Any, Tuple[int, int]],
+                                           Dict[int, str]]] = {}
+            self._ts: Dict[int, Optional[np.ndarray]] = {}
+        else:
+            # seeded construction (refreshed_view): the already-decoded
+            # column prefix plus per-unique-CFG memos folded forward --
+            # nothing about the previously-loaded segments is re-derived
+            self.columns = _reuse["columns"]
+            self._sigs = _reuse["sigs"]
+            self._counts = dict(_reuse["counts"])
+            self._positions = dict(_reuse["positions"])
+            self._pfstate = dict(_reuse["pfstate"])
+            self._ts = dict(_reuse["ts"])
         self._cfg_mult: Dict[int, int] = {}
         for u in self.cfg_index:
             self._cfg_mult[u] = self._cfg_mult.get(u, 0) + 1
         # per-unique-CFG memos
-        self._counts: Dict[int, Dict[int, int]] = {}
-        self._positions: Dict[int, Tuple[Dict[int, int], Dict[int, int]]] = {}
-        self._perfile: Dict[int, Dict[Any, Dict[str, int]]] = {}
+        self._perfile: Dict[int, Dict[Any, Dict[str, int]]] = {
+            u: _contrib_dicts(contrib)
+            for u, (contrib, _exit) in self._pfstate.items()}
         self._spancols: Dict[Tuple[int, tuple], Any] = {}
         self._totals: Optional[Dict[int, int]] = None
-        # per-rank timestamp memo (decompressed lazily)
-        self._ts: Dict[int, Optional[np.ndarray]] = {}
 
     # -- column construction --------------------------------------------------
 
     def _sig_info(self, t: int) -> _SigInfo:
-        cols = self.columns
-        finfo = self.functions[int(cols.func_id[t])]
-        args, ret = cols.args[t], cols.ret[t]
-        roles = finfo["arg_roles"]
-        s = _SigInfo()
-        s.name = finfo["name"]
-        s.layer = finfo["layer"]
-        s.is_data = s.name in _DATA_FUNCS
-        s.is_io_layer = s.layer in _IO_LAYERS
-        # _size_of: first BUF/SIZE int arg, else int return, else 0
-        size = None
-        for v, role in zip(args, roles):
-            if role in ("buf", "size") and isinstance(v, int):
-                size = v
-                break
-        ret_is_offset = (finfo["ret_role"] == "offset"
-                         and isinstance(ret, (int, IterPattern, RankPattern)))
-        s.size = size if size is not None else (
-            ret if isinstance(ret, int) else 0)
-        # a size that would come from a pattern-coded return cannot be read
-        # off the signature alone (it depends on the run index / rank)
-        s.size_symbolic = size is None and ret_is_offset \
-            and not isinstance(ret, int)
-        s.handle = next((v.id for v, role in zip(args, roles)
-                         if role == "handle" and hasattr(v, "id")), _NO_HANDLE)
-        off_slots = [j for j, r in enumerate(roles)
-                     if r == "offset" and j < len(args)]
-        if off_slots or ret_is_offset:
-            key = _derive_key(int(cols.func_id[t]), int(cols.thread[t]),
-                              args, ret, roles, ret_is_offset)
-            enc = [args[j] for j in off_slots]
-            if ret_is_offset:
-                enc.append(ret)
-            patsig = tuple((v.a, v.b) if isinstance(v, IterPattern) else v
-                           for v in enc)
-            has_iter = any(isinstance(v, IterPattern) for v in enc)
-            # run-key components are never offset-fitted, so a RankPattern
-            # in them would make run identity rank-dependent (guarded)
-            key_rankdep = (_contains_rankpattern(key[3])
-                           or _contains_rankpattern(key[4]))
-            s.enc = (key, tuple(enc), patsig, has_iter, off_slots,
-                     ret_is_offset, key_rankdep)
-        return s
+        return make_sig_info(self.columns, self.functions, t)
 
     # -- grammar-weighted counts ----------------------------------------------
 
@@ -294,12 +432,15 @@ class TraceView:
 
     @property
     def ts_store(self):
-        """The reader's per-rank timestamp store (single-blob, block-indexed
-        or stitched multi-segment; shared ``blocks_touched`` counter)."""
-        return self.reader.ts_store
+        """The per-rank timestamp store THIS VIEW was built over
+        (single-blob, block-indexed or stitched multi-segment; shared
+        ``blocks_touched`` counter).  Captured at construction: the view
+        stays consistent with its snapshot even after the reader folds in
+        newly committed segments."""
+        return self._ts_store
 
     def _decompress_ts(self, rank: int) -> Optional[np.ndarray]:
-        return self.reader.ts_store.load(rank)
+        return self._ts_store.load(rank)
 
     def timestamps(self, rank: int) -> Optional[np.ndarray]:
         """(n, 2) entry/exit tick array of one rank, or None when the trace
@@ -471,95 +612,36 @@ class TraceView:
         grammars evaluate in O(|grammar|) instead of O(stream).
         Property-tested equal to :meth:`_per_file_walk_linear`, which also
         serves as the fallback for pathologically deep grammars."""
-        try:
-            return self._per_file_walk_memo(u)
-        except RecursionError:
-            return self._per_file_walk_linear(u)
+        contrib, _exit = self._pf_state(u)
+        return _contrib_dicts(contrib)
+
+    def _pf_state(self, u: int) -> Tuple[Dict[Any, Tuple[int, int]],
+                                         Dict[int, str]]:
+        """``(contrib, exit_live)`` of CFG ``u``'s whole stream under empty
+        entry bindings, memoized -- the resumable form the incremental
+        refresh folds new segments onto (:func:`per_file_fold`)."""
+        st = self._pfstate.get(u)
+        if st is None:
+            try:
+                st = per_file_fold(self.grammars[u], self._sigs,
+                                   self.columns, {})
+            except RecursionError:
+                st = per_file_fold_linear(self.grammars[u], self._sigs,
+                                          self.columns, {})
+            self._pfstate[u] = st
+        return st
 
     def _per_file_walk_memo(self, u: int) -> Dict[Any, Dict[str, int]]:
-        rules = self.grammars[u]
-        sigs = self._sigs
-        cols = self.columns
-        n = len(rules)
-        # static per-rule summaries, children before parents: the handles a
-        # rule's subtree attributes data calls to (its read set) and its net
-        # handle->path state update (constant strings -> idempotent)
-        reads: List[set] = [set() for _ in range(n)]
-        upd: List[Dict[int, str]] = [{} for _ in range(n)]
-        for i in reversed(_topo_order(rules)):
-            rd: set = set()
-            up: Dict[int, str] = {}
-            for code, _exp in rules[i]:
-                x = code >> 1
-                if code & 1:
-                    rd |= reads[x]
-                    up.update(upd[x])
-                else:
-                    s = sigs[x]
-                    if s.is_data and s.handle is not _NO_HANDLE:
-                        rd.add(s.handle)
-                    if s.name in _OPEN_FUNCS and hasattr(cols.ret[x], "id"):
-                        up[cols.ret[x].id] = str(cols.args[x][0])
-            reads[i] = rd
-            upd[i] = up
-
-        live: Dict[int, str] = {}
-        memo: Dict[tuple, Dict[Any, Tuple[int, int]]] = {}
-
-        def add(dst: Dict[Any, Tuple[int, int]],
-                src: Dict[Any, Tuple[int, int]], mult: int) -> None:
-            for k, (b, c) in src.items():
-                ob, oc = dst.get(k, (0, 0))
-                dst[k] = (ob + mult * b, oc + mult * c)
-
-        def walk(rid: int) -> Dict[Any, Tuple[int, int]]:
-            rkey = (rid,) + tuple((h, live.get(h))
-                                  for h in sorted(reads[rid]))
-            hit = memo.get(rkey)
-            if hit is not None:
-                live.update(upd[rid])
-                return hit
-            contrib: Dict[Any, Tuple[int, int]] = {}
-            for code, exp in rules[rid]:
-                x = code >> 1
-                if code & 1:
-                    add(contrib, walk(x), 1)
-                    if exp > 1:
-                        # state after app 1 is a fixed point: apps 2..exp
-                        # all see the same entry state and contribute alike
-                        add(contrib, walk(x), exp - 1)
-                else:
-                    s = sigs[x]
-                    if s.name in _OPEN_FUNCS and hasattr(cols.ret[x], "id"):
-                        live[cols.ret[x].id] = str(cols.args[x][0])
-                    if s.is_data:
-                        k = "?" if s.handle is _NO_HANDLE \
-                            else live.get(s.handle)
-                        ob, oc = contrib.get(k, (0, 0))
-                        contrib[k] = (ob + exp * s.size, oc + exp)
-            memo[rkey] = contrib
-            return contrib
-
-        res = walk(0) if rules else {}
-        return {k: {"bytes": b, "calls": c} for k, (b, c) in res.items()}
+        contrib, _exit = per_file_fold(self.grammars[u], self._sigs,
+                                       self.columns, {})
+        return _contrib_dicts(contrib)
 
     def _per_file_walk_linear(self, u: int) -> Dict[Any, Dict[str, int]]:
         """Exact per-file attribution: one linear walk of CFG ``u``'s
         stream (the reference for :meth:`_per_file_walk`)."""
-        sigs = self._sigs
-        cols = self.columns
-        handles: Dict[int, str] = {}
-        per: Dict[Any, Dict[str, int]] = {}
-        for t in expand_grammar(self.grammars[u]):
-            s = sigs[t]
-            if s.name in _OPEN_FUNCS and hasattr(cols.ret[t], "id"):
-                handles[cols.ret[t].id] = str(cols.args[t][0])
-            if s.is_data:
-                key = "?" if s.handle is _NO_HANDLE else handles.get(s.handle)
-                agg = per.setdefault(key, {"bytes": 0, "calls": 0})
-                agg["bytes"] += s.size
-                agg["calls"] += 1
-        return per
+        contrib, _exit = per_file_fold_linear(self.grammars[u], self._sigs,
+                                              self.columns, {})
+        return _contrib_dicts(contrib)
 
     # -- sequential queries (one walk per unique CFG) -------------------------
 
@@ -1029,3 +1111,115 @@ class TraceView:
         for r in range(self.nranks):
             for rec in self.iter_records(r, timestamps=timestamps):
                 yield r, rec
+
+
+# ---------------------------------------------------------------------------
+# incremental view refresh (TraceReader.refresh support)
+# ---------------------------------------------------------------------------
+
+
+def refreshed_view(old_view: TraceView, reader,
+                   folds: Sequence[Tuple[Dict[str, Any], int,
+                                         Sequence[Tuple[int, int]], Any]]
+                   ) -> TraceView:
+    """The view of a just-refreshed reader, built by folding ONLY the newly
+    committed segments onto ``old_view``'s memoized state.
+
+    ``folds`` holds one ``(data, toff, pairs, seg_store)`` per folded
+    segment in epoch order: ``data`` is the segment's decoded payload,
+    ``toff`` the CST offset its terminals were spliced at, ``pairs`` the
+    fold's unique-CFG provenance (``pairs[new_u] = (old_u, seg_u)``), and
+    ``seg_store`` the segment's timestamp store.  Only the new segments'
+    CST entries are decoded and only their (delta-sized) grammars are
+    walked; every per-unique-CFG memo of ``old_view`` -- terminal counts,
+    first/last positions, per-file fold state, decompressed timestamps --
+    is carried forward through the provenance map, never re-derived from
+    already-loaded segments.
+    """
+    cols = old_view.columns
+    sigs = list(old_view._sigs)
+    counts: Dict[int, Dict[int, int]] = {}
+    positions = dict(old_view._positions)
+    pfstate: Dict[int, Tuple[Dict[Any, Tuple[int, int]],
+                             Dict[int, str]]] = {}
+    ts = dict(old_view._ts)
+    functions = reader.functions
+    first_fold = True
+    for data, toff, pairs, seg_store in folds:
+        seg_cols = decode_signatures_batch(data["merged_cst"])
+        cols = concat_signature_columns(cols, seg_cols)
+        sigs.extend(make_sig_info(cols, functions, toff + j)
+                    for j in range(len(seg_cols)))
+        seg_rules: Dict[int, Any] = {}
+
+        def rules_of(su: int, data=data, seg_rules=seg_rules):
+            r = seg_rules.get(su)
+            if r is None:
+                r = parse_grammar(data["unique_cfgs"][su])
+                seg_rules[su] = r
+            return r
+
+        new_counts: Dict[int, Dict[int, int]] = {}
+        new_positions: Dict[int, Tuple[Dict[int, int],
+                                       Dict[int, int]]] = {}
+        new_pfstate: Dict[int, Tuple[Dict[Any, Tuple[int, int]],
+                                     Dict[int, str]]] = {}
+        for new_u, (old_u, seg_u) in enumerate(pairs):
+            sr = rules_of(seg_u)
+            # counts: always seeded (every query family needs them); the
+            # old half comes from the old view's memo (computed at most
+            # once per old unique CFG, O(|old grammar|), no segment reads)
+            oc = old_view.cfg_terminal_counts(old_u) if first_fold \
+                else counts[old_u]
+            merged = dict(oc)
+            for t, c in terminal_counts(sr).items():
+                merged[toff + t] = merged.get(toff + t, 0) + c
+            new_counts[new_u] = merged
+            # positions: seeded only where the old view had them (lazy
+            # memo) -- the old terminals' first/last stream positions are
+            # unchanged by appending, the segment's shift by the old length
+            op = positions.get(old_u)
+            if op is not None:
+                old_len = sum(oc.values())
+                first = dict(op[0])
+                last = dict(op[1])
+                seg_first, seg_last = terminal_positions(sr)
+                for t, p in seg_first.items():
+                    first[toff + t] = old_len + p
+                for t, p in seg_last.items():
+                    last[toff + t] = old_len + p
+                new_positions[new_u] = (first, last)
+            # per-file attribution: resumable fold -- the segment's stream
+            # is evaluated under the old stream's EXIT handle bindings and
+            # its contributions added on
+            if first_fold:
+                pf = old_view._pf_state(old_u) \
+                    if (old_u in old_view._pfstate
+                        or old_u in old_view._perfile) else None
+            else:
+                pf = pfstate.get(old_u)
+            if pf is not None:
+                old_contrib, old_exit = pf
+                try:
+                    seg_contrib, exit_live = per_file_fold(
+                        sr, sigs, cols, old_exit, toff)
+                except RecursionError:
+                    seg_contrib, exit_live = per_file_fold_linear(
+                        sr, sigs, cols, old_exit, toff)
+                merged_pf = dict(old_contrib)
+                for k, (b, c) in seg_contrib.items():
+                    ob, occ = merged_pf.get(k, (0, 0))
+                    merged_pf[k] = (ob + b, occ + c)
+                new_pfstate[new_u] = (merged_pf, exit_live)
+        counts, positions, pfstate = new_counts, new_positions, new_pfstate
+        # timestamps: append the segment's rows to already-decompressed
+        # rank memos (untouched ranks stay lazy)
+        for r, old_ts in list(ts.items()):
+            seg_ts = seg_store.load(r)
+            parts = [p for p in (old_ts, seg_ts) if p is not None]
+            ts[r] = (parts[0] if len(parts) == 1
+                     else np.concatenate(parts, axis=0)) if parts else None
+        first_fold = False
+    return TraceView(reader, _reuse={
+        "columns": cols, "sigs": sigs, "counts": counts,
+        "positions": positions, "pfstate": pfstate, "ts": ts})

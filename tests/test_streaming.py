@@ -6,6 +6,7 @@ import json
 import os
 import random
 import shutil
+import threading
 
 import numpy as np
 import pytest
@@ -712,3 +713,209 @@ def test_windowed_bandwidth_exact_vs_record_iterator(tmp_path):
         want_bytes = sum(rec_bytes(rc) for rc in want_rows)
         assert b["bytes"] == want_bytes
         assert b["lo_MBps"] == b["hi_MBps"]
+
+
+# ---------------------------------------------------------------------------
+# incremental refresh: fold newly committed epochs without reconstruction
+# ---------------------------------------------------------------------------
+
+
+def test_refresh_folds_each_new_epoch_value_identically(tmp_path):
+    """Commit epochs one at a time against a live stitched reader:
+    ``refresh()`` reports exactly one fold per epoch and the folded
+    reader stays value-identical to a from-scratch stitched read --
+    including forwarded view memos (the queries warmed before the fold)."""
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(90), 70, 0, 1)
+    bounds = [0, 18, 35, 52, len(calls)]
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[bounds[0]:bounds[1]])
+    rec.flush()
+
+    reader = TraceReader(sd, mode="stitched")
+    for i in range(1, len(bounds) - 1):
+        # warm every memo path so the fold must carry them all forward
+        view = reader.view()
+        view.io_summary()
+        view.call_chains()
+        view.consistency_pairs()
+        old_view, old_total = view, view.total_records()
+        t = _feed(rec, calls[bounds[i]:bounds[i + 1]], t)
+        rec.flush()
+        assert reader.refresh() == 1
+        assert reader.refresh() == 0  # idempotent until the next commit
+        _assert_value_identical(reader, TraceReader(sd, mode="stitched"))
+        # the pre-fold view keeps serving its snapshot
+        assert old_view.total_records() == old_total
+    assert reader.n_segments == len(bounds) - 1
+
+
+def test_refresh_multirank_under_live_world(tmp_path):
+    """A 4-rank world commits an epoch, pauses while the main thread
+    opens a reader and warms its view, then commits another: one
+    ``refresh()`` folds it and matches a fresh stitched read."""
+    sd = str(tmp_path / "s")
+    nranks = 4
+    rank_calls = [_gen_calls(random.Random(100 + r), 20, r, nranks)
+                  for r in range(nranks)]
+    split = [len(c) // 2 for c in rank_calls]
+    b_open = threading.Barrier(nranks + 1)
+    b_go = threading.Barrier(nranks + 1)
+
+    def worker(comm: Comm, rank: int):
+        rec = Recorder(rank=rank,
+                       config=RecorderConfig(trace_dir=sd))
+        t = _feed(rec, rank_calls[rank][:split[rank]])
+        rec.flush(comm)
+        b_open.wait()
+        b_go.wait()
+        _feed(rec, rank_calls[rank][split[rank]:], t)
+        rec.flush(comm)
+        return None
+
+    world = threading.Thread(target=run_thread_world, args=(nranks, worker),
+                             daemon=True)
+    world.start()
+    b_open.wait()
+    reader = TraceReader(sd, mode="stitched")
+    view = reader.view()
+    view.io_summary()
+    for r in range(nranks):
+        view.n_records(r)
+    b_go.wait()
+    world.join(timeout=30)
+    assert not world.is_alive()
+    assert reader.refresh() == 1
+    _assert_value_identical(reader, TraceReader(sd, mode="stitched"))
+
+
+def test_refresh_tail_advances_to_newest_segment(tmp_path):
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(91), 40, 0, 1)
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, calls[:14])
+    rec.flush()
+    tail = TraceReader(sd, mode="tail")
+    n0 = tail.view().total_records()
+    assert tail.refresh() == 0  # nothing new
+    t = _feed(rec, calls[14:27], t)
+    rec.flush()
+    assert tail.refresh() == 1  # newest segment changed
+    assert tail._tail_name == trace_format.segment_name(1)
+    want = TraceReader(sd, mode="tail")
+    assert tail.view().total_records() == want.view().total_records() != n0
+    assert list(tail.all_records()) == list(want.all_records())
+
+
+def test_refresh_single_and_merged_are_noops(tmp_path):
+    # plain single-segment trace: immutable once written
+    td = str(tmp_path / "plain")
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=td))
+    _feed(rec, _gen_calls(random.Random(92), 10, 0, 1))
+    rec.finalize()
+    reader = TraceReader(td)
+    assert reader.refresh() == 0
+
+    # finalized stream served via the merged trace: refresh stays put
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(93), 20, 0, 1)
+    _drive_streaming(sd, [calls], [10])
+    auto = TraceReader(sd, mode="auto")
+    assert auto._serving == "merged"
+    total = auto.view().total_records()
+    assert auto.refresh() == 0
+    assert auto.view().total_records() == total
+
+    # a stitched reader over the same finalized stream: the merged entry
+    # is not a new epoch, so nothing folds
+    stitched = TraceReader(sd, mode="stitched")
+    assert stitched.refresh() == 0
+
+
+# ---------------------------------------------------------------------------
+# writer/reader race at the commit crash points (satellite: concurrent
+# readers must never observe a half-committed segment or torn manifest)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("crash_point",
+                         ["pre-rename", "pre-manifest", "post-commit"])
+def test_reader_never_observes_partial_commit_across_crash(
+        tmp_path, crash_point):
+    """A writer crashes mid-commit at each commit point while a reader
+    loop concurrently opens/refreshes the directory.  Readers may only
+    ever see exact manifest prefixes -- a half-written ``.tmp`` segment,
+    an orphan directory (renamed but unlisted), or a torn manifest must
+    be invisible.  The run then resumes (new recorder, same directory)
+    and the readers converge on the final committed history."""
+    from repro.core import faults
+    from repro.core.faults import FaultPlan, SimulatedCrash
+
+    sd = str(tmp_path / "s")
+    calls = _gen_calls(random.Random(94), 60, 0, 1)
+    bounds = [0, 16, 31, 47, len(calls)]
+    parts = [calls[bounds[i]:bounds[i + 1]] for i in range(len(bounds) - 1)]
+
+    stop = threading.Event()
+    observed, errors = [], []
+
+    def reader_loop():
+        rdr = None
+        while not stop.is_set():
+            try:
+                if rdr is None:
+                    rdr = TraceReader(sd, mode="stitched")
+                else:
+                    rdr.refresh()
+                observed.append(rdr.view().total_records())
+                rdr._view = None  # re-derive from the folded state
+            except TraceFormatError:
+                rdr = None  # not readable yet / superseded: retry fresh
+            except Exception as e:  # noqa: BLE001
+                errors.append(repr(e))
+                return
+
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec, parts[0])
+    rec.flush()
+    th = threading.Thread(target=reader_loop, daemon=True)
+    th.start()
+    t = _feed(rec, parts[1], t)
+    with faults.injected(FaultPlan(crash_point=crash_point)):
+        with pytest.raises(SimulatedCrash):
+            rec.flush()
+    # the "process" died mid-commit; what a reader sees RIGHT NOW must be
+    # an exact committed prefix (epoch 1 only made it in post-commit)
+    mid = TraceReader(sd, mode="stitched")
+    committed = 2 if crash_point == "post-commit" else 1
+    assert mid.n_segments == committed
+    assert mid.skipped == []
+    del rec
+
+    # restart: a new recorder resumes the committed epochs and carries on
+    rec2 = Recorder(rank=0, config=RecorderConfig(trace_dir=sd))
+    t = _feed(rec2, parts[2], t)
+    rec2.flush()
+    assert rec2.epochs_resumed == committed
+    _feed(rec2, parts[3], t)
+    rec2.flush()
+    stop.set()
+    th.join(timeout=30)
+    assert not th.is_alive()
+    assert errors == []
+
+    # every concurrently observed total is an exact epoch-boundary cumsum
+    # of the final manifest -- never a torn intermediate
+    entries = trace_format.read_manifest(sd)["segments"]
+    valid, acc = set(), 0
+    for e in entries:
+        acc += e["n_records"]
+        valid.add(acc)
+    assert set(observed) <= valid
+    final = TraceReader(sd, mode="stitched")
+    assert final.n_segments == committed + 2
+    _assert_value_identical(final, final)
+    # post-commit: nothing lost; pre-*: exactly the crashed epoch's
+    # records are gone (the process died holding them)
+    lost = 0 if crash_point == "post-commit" else len(parts[1])
+    assert final.view().total_records() == len(calls) - lost

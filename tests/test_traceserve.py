@@ -1,0 +1,516 @@
+"""Trace query service: live compressed-domain queries over many jobs.
+
+The properties under test --
+
+  * the watcher classifies jobs (stream / plain / degraded / quarantined
+    / unreadable) from manifests alone,
+  * per-segment incrementality: one newly committed epoch costs exactly
+    ONE segment fold and never re-reads already-loaded segments,
+  * every query family served from the cache is value-identical to a
+    fresh direct ``TraceReader(mode="stitched")`` read, asserted while
+    epochs commit underneath, including a degraded ``ranks_present``
+    epoch whose coverage mask propagates into service responses,
+  * generation-stamped snapshots: concurrent clients hammering the
+    service while a writer commits never observe a torn view (every
+    observed total is an exact epoch-boundary cumsum),
+  * LRU eviction by resident size keeps generations monotonic,
+  * the CLI answers --list/--query/--league/--stragglers with JSON.
+"""
+
+import json
+import random
+import threading
+import time
+import warnings
+
+import pytest
+
+from repro.core import faults, trace_format
+from repro.core.comm import run_thread_world
+from repro.core.faults import FaultPlan
+from repro.core.reader import TraceReader
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+from repro.launch import traceserve as cli
+from repro.traceserve import (IncrementalViewCache, JobWatcher, TraceService,
+                              ViewSnapshot, run_query)
+import repro.core.apis  # noqa: F401  (populate registry)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.uninstall()
+
+
+def _gen_calls(rng: random.Random, n_calls: int, rank: int, nranks: int):
+    fids = {name: REGISTRY.id_of(name)
+            for name in ("open", "close", "pwrite", "lseek", "write")}
+    fd = f"fd-{rank}"
+    calls = [(fids["open"], ("/data/f.bin", 2, 438), fd)]
+    for i in range(n_calls):
+        kind = rng.random()
+        if kind < 0.6:
+            off = rank * 4096 + i * nranks * 4096
+            calls.append((fids["pwrite"], (fd, b"x" * 4096, off), 4096))
+        elif kind < 0.8:
+            calls.append((fids["lseek"], (fd, rank * 256 + i * 256, 0),
+                          rank * 256 + i * 256))
+        else:
+            calls.append((fids["write"], (fd, b"z" * 128), 128))
+    calls.append((fids["close"], (fd,), 0))
+    return calls
+
+
+def _feed(rec: Recorder, calls, tick_start: int = 0) -> int:
+    t = tick_start
+    for fid, args, ret in calls:
+        rec.record(fid, args, ret, 0, t, t + 1)
+        t += 2
+    return t
+
+
+def _fresh_snapshot(path: str) -> ViewSnapshot:
+    """A direct, from-scratch stitched read wrapped as a snapshot, so the
+    same ``run_query`` dispatch answers both sides of an identity check."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        reader = TraceReader(path, mode="stitched")
+        view = reader.view()
+    return ViewSnapshot(path=path, view=view, generation=0,
+                        n_segments=reader.n_segments,
+                        coverage=reader.coverage(), refreshed_at=0.0)
+
+
+_FAMILIES_NO_PARAMS = ("io_summary", "size_histogram", "call_chains",
+                       "overlap_ratio", "consistency_pairs",
+                       "digram_counts", "n_records")
+
+
+# ---------------------------------------------------------------------------
+# watcher
+# ---------------------------------------------------------------------------
+
+
+def test_watcher_classifies_jobs(tmp_path):
+    root = tmp_path / "runs"
+    root.mkdir()
+    (root / "not_a_trace").mkdir()          # ignored
+    (root / "loose_file.txt").write_text("x")
+
+    rec = Recorder(rank=0, config=RecorderConfig(
+        trace_dir=str(root / "stream_job")))
+    calls = _gen_calls(random.Random(0), 20, 0, 1)
+    t = _feed(rec, calls[:10])
+    rec.flush()
+    _feed(rec, calls[10:], t)
+    rec.flush()
+
+    plain = Recorder(rank=0, config=RecorderConfig(
+        trace_dir=str(root / "plain_job")))
+    _feed(plain, _gen_calls(random.Random(1), 8, 0, 1))
+    plain.finalize()
+
+    jobs = JobWatcher(str(root)).scan()
+    assert set(jobs) == {"stream_job", "plain_job"}
+    sj = jobs["stream_job"]
+    assert sj.is_stream and sj.n_segments == 2 and sj.newest_epoch == 1
+    assert not sj.has_merged and sj.complete
+    assert sj.n_records == sum(
+        e["n_records"]
+        for e in trace_format.read_manifest(sj.path)["segments"])
+    pj = jobs["plain_job"]
+    assert not pj.is_stream and pj.n_segments == 1 and pj.complete
+
+
+def test_watcher_reports_quarantined_and_caches_validation(tmp_path):
+    root = tmp_path / "runs"
+    sd = root / "job"
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=str(sd)))
+    calls = _gen_calls(random.Random(2), 16, 0, 1)
+    t = _feed(rec, calls[:8])
+    rec.flush()
+    _feed(rec, calls[8:], t)
+    rec.flush()
+    seg = trace_format.segment_name(1)
+    faults.corrupt_file(str(sd / seg / "unique_cfgs.bin"), seed=4)
+
+    w = JobWatcher(str(root))
+    info = w.scan()["job"]
+    assert [q["segment"] for q in info.quarantined] == [seg]
+    assert not info.complete
+    # committed segments are immutable: the second scan must answer from
+    # the validation cache, not re-checksum every blob
+    calls_before = len(w._val_cache)
+    w.scan()
+    assert len(w._val_cache) == calls_before
+
+
+# ---------------------------------------------------------------------------
+# per-segment incrementality (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_one_new_epoch_costs_exactly_one_segment_fold(tmp_path, monkeypatch):
+    root = tmp_path / "runs"
+    sd = root / "job"
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=str(sd)))
+    calls = _gen_calls(random.Random(3), 45, 0, 1)
+    t = _feed(rec, calls[:15])
+    rec.flush()
+    t = _feed(rec, calls[15:30], t)
+    rec.flush()
+
+    svc = TraceService(str(root), max_staleness_s=0.0)
+    r0 = svc.query("job", "io_summary")
+    s0 = svc.stats()["cache"]
+    assert s0["view_builds"] == 1 and s0["segments_loaded"] == 2
+    assert s0["segment_folds"] == 0
+
+    # every segment read from here on is observed
+    loads = []
+    real_load = trace_format.load_segment
+
+    def counting_load(trace_dir, entry):
+        loads.append(entry["name"])
+        return real_load(trace_dir, entry)
+
+    monkeypatch.setattr(trace_format, "load_segment", counting_load)
+
+    _feed(rec, calls[30:], t)
+    rec.flush()
+    r1 = svc.query("job", "io_summary")
+    s1 = svc.stats()["cache"]
+    # exactly one fold, exactly the new segment touched: prior segments
+    # are never re-read, re-validated or re-decoded
+    assert s1["segment_folds"] - s0["segment_folds"] == 1
+    assert loads == [trace_format.segment_name(2)]
+    assert s1["view_builds"] == 1
+    assert r1.generation == r0.generation + 1
+    # and the folded aggregate is the full-history answer
+    assert r1.value == run_query(_fresh_snapshot(str(sd)), "io_summary")
+    assert r1.value["total_bytes"] > r0.value["total_bytes"]
+    svc.close()
+
+
+def test_fresh_hit_is_pure_lookup_and_memo_invalidates_per_generation(
+        tmp_path):
+    root = tmp_path / "runs"
+    sd = root / "job"
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=str(sd)))
+    calls = _gen_calls(random.Random(4), 30, 0, 1)
+    t = _feed(rec, calls[:15])
+    rec.flush()
+
+    svc = TraceService(str(root), max_staleness_s=0.0)
+    a = svc.query("job", "size_histogram")
+    assert not a.cached
+    b = svc.query("job", "size_histogram")
+    assert b.cached and b.value == a.value and b.generation == a.generation
+    # a new epoch bumps the generation; the memo entry must miss
+    _feed(rec, calls[15:], t)
+    rec.flush()
+    c = svc.query("job", "size_histogram")
+    assert not c.cached and c.generation == b.generation + 1
+    assert c.value != b.value
+    svc.close()
+
+
+def test_staleness_bound_pins_or_refreshes(tmp_path):
+    root = tmp_path / "runs"
+    sd = root / "job"
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=str(sd)))
+    calls = _gen_calls(random.Random(5), 30, 0, 1)
+    t = _feed(rec, calls[:15])
+    rec.flush()
+
+    svc = TraceService(str(root), max_staleness_s=0.0)
+    r0 = svc.query("job", "n_records")
+    _feed(rec, calls[15:], t)
+    rec.flush()
+    # an infinite bound serves the pinned snapshot: stale but consistent
+    stale = svc.query("job", "n_records", max_staleness_s=float("inf"))
+    assert stale.generation == r0.generation
+    assert stale.value == r0.value
+    # a zero bound forces the refresh
+    live = svc.query("job", "n_records", max_staleness_s=0.0)
+    assert live.generation == r0.generation + 1
+    assert live.value["total"] > r0.value["total"]
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# value identity while epochs commit underneath
+# ---------------------------------------------------------------------------
+
+
+def test_every_family_value_identical_while_committing(tmp_path):
+    root = tmp_path / "runs"
+    sd = root / "job"
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=str(sd)))
+    calls = _gen_calls(random.Random(6), 60, 0, 1)
+    bounds = [0, 16, 31, 47, len(calls)]
+
+    svc = TraceService(str(root), max_staleness_s=0.0)
+    t = 0
+    for i in range(len(bounds) - 1):
+        t = _feed(rec, calls[bounds[i]:bounds[i + 1]], t)
+        rec.flush()
+        fresh = _fresh_snapshot(str(sd))
+        for fam in _FAMILIES_NO_PARAMS:
+            got = svc.query("job", fam)
+            assert got.value == run_query(fresh, fam), (i, fam)
+        got = svc.query("job", "bandwidth_bounds", {"t0": 0, "t1": t})
+        assert got.value == run_query(fresh, "bandwidth_bounds",
+                                      {"t0": 0, "t1": t})
+        got = svc.query("job", "overlap_ratio",
+                        {"rank": 0, "t0": 0, "t1": t})
+        assert got.value == run_query(fresh, "overlap_ratio",
+                                      {"rank": 0, "t0": 0, "t1": t})
+    stats = svc.stats()["cache"]
+    assert stats["view_builds"] == 1
+    assert stats["segment_folds"] == len(bounds) - 2
+    svc.close()
+
+
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")
+def test_degraded_epoch_coverage_propagates_into_responses(tmp_path):
+    """A rank dies mid-run: the survivors commit a ``ranks_present``
+    epoch.  The service folds it incrementally and every response carries
+    the coverage mask; the straggler report flags the gapped rank."""
+    root = tmp_path / "runs"
+    sd = str(root / "job")
+    # dead=1 is a leaf of the reduce tree: exactly one rank goes missing
+    # (an interior rank's silence would absorb its subtree's ranks too)
+    nranks, dead = 4, 1
+    first = [_gen_calls(random.Random(70 + r), 8, r, nranks)
+             for r in range(nranks)]
+    extra = [_gen_calls(random.Random(80 + r), 5, r, nranks)
+             for r in range(nranks)]
+    b_built = threading.Barrier(nranks + 1)
+    b_go = threading.Barrier(nranks + 1)
+
+    def worker(comm, rank):
+        rec = Recorder(rank=rank, config=RecorderConfig(
+            trace_dir=sd, flush_timeout_s=2.0))
+        t = _feed(rec, first[rank])
+        rec.flush(comm)
+        b_built.wait()   # main: build the service on the healthy epoch
+        b_go.wait()      # main: install the dead-rank fault
+        _feed(rec, extra[rank], t)
+        rec.flush(comm)  # degraded commit (no finalize: job still "live")
+        return None
+
+    world = threading.Thread(
+        target=run_thread_world, args=(nranks, worker), daemon=True)
+    world.start()
+    b_built.wait()
+    svc = TraceService(str(root), mode="stitched", max_staleness_s=0.0)
+    r0 = svc.query("job", "n_records")
+    assert r0.coverage["complete"] and r0.coverage["ranks_partial"] == []
+    faults.install(FaultPlan(dead_ranks=(dead,)))
+    b_go.wait()
+    world.join(timeout=30)
+    assert not world.is_alive()
+    faults.uninstall()
+
+    r1 = svc.query("job", "n_records")
+    assert r1.generation == r0.generation + 1
+    assert not r1.coverage["complete"]
+    assert r1.coverage["ranks_partial"] == [dead]
+    assert len(r1.coverage["degraded_epochs"]) == 1
+    assert svc.query("job", "coverage").value == r1.coverage
+    # the dead rank's epoch-2 records are absent; count + coverage match
+    # a fresh direct stitched read of the same directory
+    fresh = _fresh_snapshot(sd)
+    assert r1.value == run_query(fresh, "n_records")
+    assert r1.coverage["degraded_epochs"] == \
+        fresh.coverage["degraded_epochs"]
+    assert dead in svc.stragglers("job")["stragglers"]
+    assert svc.query("job", "io_summary").value == \
+        run_query(fresh, "io_summary")
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# snapshot consistency under concurrent commit + query load
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_clients_never_observe_torn_views(tmp_path):
+    root = tmp_path / "runs"
+    sd = root / "job"
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=str(sd)))
+    calls = _gen_calls(random.Random(7), 120, 0, 1)
+    bounds = list(range(0, len(calls), 12)) + [len(calls)]
+    t = _feed(rec, calls[bounds[0]:bounds[1]])
+    rec.flush()
+
+    svc = TraceService(str(root), max_staleness_s=0.0, workers=4)
+    stop = threading.Event()
+    observed = []   # (generation, total) per successful client read
+    errors = []
+
+    def client():
+        while not stop.is_set():
+            try:
+                res = svc.query("job", "n_records")
+                observed.append((res.generation, res.value["total"]))
+            except Exception as e:  # noqa: BLE001
+                errors.append(repr(e))
+
+    threads = [threading.Thread(target=client) for _ in range(3)]
+    for th in threads:
+        th.start()
+    for i in range(1, len(bounds) - 1):
+        t = _feed(rec, calls[bounds[i]:bounds[i + 1]], t)
+        rec.flush()
+        time.sleep(0.01)
+    stop.set()
+    for th in threads:
+        th.join()
+    svc.close()
+
+    assert errors == []
+    # every observed total is an exact epoch-boundary cumsum: no client
+    # ever saw a half-folded view
+    entries = trace_format.read_manifest(str(sd))["segments"]
+    valid, acc = set(), 0
+    for e in entries:
+        acc += e["n_records"]
+        valid.add(acc)
+    totals = {tot for _, tot in observed}
+    assert totals <= valid
+    assert acc in totals  # the final state was eventually observed
+    # totals grow monotonically with the generation stamp
+    by_gen = {}
+    for gen, tot in observed:
+        by_gen.setdefault(gen, set()).add(tot)
+    for gen, tots in by_gen.items():
+        assert len(tots) == 1, f"generation {gen} served two totals"
+    gens = sorted(by_gen)
+    ordered = [next(iter(by_gen[g])) for g in gens]
+    assert ordered == sorted(ordered)
+
+
+# ---------------------------------------------------------------------------
+# eviction
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_by_resident_size_keeps_generations_monotonic(tmp_path):
+    root = tmp_path / "runs"
+    for name, seed in (("a", 10), ("b", 11)):
+        rec = Recorder(rank=0, config=RecorderConfig(
+            trace_dir=str(root / name)))
+        calls = _gen_calls(random.Random(seed), 20, 0, 1)
+        t = _feed(rec, calls[:10])
+        rec.flush()
+        _feed(rec, calls[10:], t)
+        rec.flush()
+
+    cache = IncrementalViewCache(max_resident_bytes=1)  # one job at most
+    pa, pb = str(root / "a"), str(root / "b")
+    s_a = cache.get(pa)
+    assert cache.resident_paths() == [pa]
+    cache.get(pb)
+    assert cache.resident_paths() == [pb]       # a evicted (LRU)
+    assert cache.stats["evictions"] == 1
+    s_a2 = cache.get(pa)
+    # rebuilt from scratch, but the generation never goes backwards
+    assert s_a2.generation > s_a.generation
+    assert cache.stats["view_builds"] == 3
+    # in-flight snapshots of the evicted entry still answer queries
+    assert run_query(s_a, "n_records") == run_query(s_a2, "n_records")
+
+
+# ---------------------------------------------------------------------------
+# cross-job comparisons + CLI
+# ---------------------------------------------------------------------------
+
+
+def _two_job_root(tmp_path):
+    root = tmp_path / "runs"
+    for name, seed, n in (("heavy", 20, 40), ("light", 21, 10)):
+        rec = Recorder(rank=0, config=RecorderConfig(
+            trace_dir=str(root / name)))
+        calls = _gen_calls(random.Random(seed), n, 0, 1)
+        t = _feed(rec, calls[: len(calls) // 2])
+        rec.flush()
+        _feed(rec, calls[len(calls) // 2:], t)
+        rec.flush()
+    return root
+
+
+def test_league_table_ranks_jobs(tmp_path):
+    root = _two_job_root(tmp_path)
+    with TraceService(str(root), max_staleness_s=0.0) as svc:
+        rows = svc.league_table()
+        assert [r["rank"] for r in rows] == [0, 1]
+        assert rows[0]["aggregate_MBps"] >= rows[1]["aggregate_MBps"]
+        assert {r["path"].rsplit("/", 1)[-1] for r in rows} == \
+            {"heavy", "light"}
+        # per-job isolation: a bogus path ranks last with an error
+        rows = svc.engine.league_table(
+            [str(root / "heavy"), str(root / "nope")])
+        assert rows[-1]["path"].endswith("nope") and "error" in rows[-1]
+
+
+def test_cli_list_query_league_stragglers(tmp_path, capsys):
+    root = _two_job_root(tmp_path)
+    assert cli.main(["--root", str(root), "--list"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert set(doc["jobs"]) == {"heavy", "light"}
+    assert doc["jobs"]["heavy"]["n_segments"] == 2
+
+    assert cli.main(["--root", str(root), "--job", "heavy",
+                     "--query", "size_histogram"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["family"] == "size_histogram" and doc["generation"] == 1
+    assert doc["value"] == run_query(
+        _fresh_snapshot(str(root / "heavy")), "size_histogram")
+
+    assert cli.main(["--root", str(root), "--job", "heavy",
+                     "--query", "call_chains", "--rank", "0"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["params"] == {"rank": 0}
+
+    assert cli.main(["--root", str(root), "--league"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert len(doc["league"]) == 2
+    assert doc["stats"]["cache"]["view_builds"] == 2
+
+    assert cli.main(["--root", str(root), "--job", "light",
+                     "--stragglers"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["stragglers"] == []
+
+    # actions needing --job fail cleanly
+    assert cli.main(["--root", str(root), "--query", "io_summary"]) == 2
+    capsys.readouterr()
+
+
+def test_watch_thread_keeps_resident_jobs_fresh(tmp_path):
+    root = tmp_path / "runs"
+    sd = root / "job"
+    rec = Recorder(rank=0, config=RecorderConfig(trace_dir=str(sd)))
+    calls = _gen_calls(random.Random(30), 30, 0, 1)
+    t = _feed(rec, calls[:15])
+    rec.flush()
+    svc = TraceService(str(root), max_staleness_s=float("inf"),
+                       watch_interval_s=0.05)
+    r0 = svc.query("job", "n_records")
+    _feed(rec, calls[15:], t)
+    rec.flush()
+    # the watch thread refreshes the resident job in the background, so
+    # even an infinitely-stale-tolerant query sees the new epoch soon
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        r1 = svc.query("job", "n_records",
+                       max_staleness_s=float("inf"))
+        if r1.generation > r0.generation:
+            break
+        time.sleep(0.02)
+    assert r1.generation > r0.generation
+    assert r1.value["total"] > r0.value["total"]
+    svc.close()
