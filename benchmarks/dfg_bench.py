@@ -1,0 +1,197 @@
+"""Compressed-domain DFG / phase observability: sublinear-in-records cost.
+
+Two contracts, straight from the grammar (``repro.core.dfg``):
+
+  * **flat wall time as records grow**: the directly-follows graph, the
+    phase segmentation, and the cross-rank divergence report are all
+    O(|grammar| + |CST|) walks -- growing the record count 100x at fixed
+    grammar size (``synth_rank_states`` run-length shapes) may not grow
+    the query wall time past ``FLAT_FACTOR`` x the smallest point plus an
+    absolute slack.  A per-record scan would grow 100x.
+  * **incremental fold accounting**: a live streaming job queried through
+    the trace service answers ``dfg`` / ``phases`` / ``anomalies`` after
+    every commit at exactly one segment fold per committed epoch
+    (``stats["segment_folds"] == epochs - 1``) -- the fold walks only the
+    delta grammar, never the stitched history.
+
+Writes artifacts/bench/dfg_phase.json:
+  {"config": ..., "rows": [...], "incremental": {...}}, one row per
+  (records_per_rank, query) with wall_s, grammar_items, n_records_total.
+
+    PYTHONPATH=src python -m benchmarks.dfg_bench [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import shutil
+import sys
+import tempfile
+import time
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.core import trace_format
+from repro.core.interprocess import tree_finalize_ranks
+from repro.core.reader import TraceReader
+from repro.core.recorder import Recorder, RecorderConfig
+from repro.core.specs import REGISTRY
+from repro.core.traceview import TraceView
+from repro.traceserve import TraceService
+import repro.core.apis  # noqa: F401  (populate registry)
+
+from .workloads import synth_rank_states
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+FLAT_FACTOR = 5.0     # largest point may cost at most this x the smallest
+ABS_SLACK_S = 0.010   # plus this much absolute timing noise allowance
+
+
+def _build_trace(records_per_rank: int, nranks: int, pattern: str,
+                 n_groups: int, tmp: str) -> str:
+    n_calls = max(1, records_per_rank // n_groups)
+    csts, cfgs = synth_rank_states(nranks, n_groups=n_groups,
+                                   n_calls=n_calls, pattern=pattern)
+    merge, cfgres = tree_finalize_ranks(csts, cfgs, REGISTRY)
+    d = os.path.join(tmp, f"dfg_{records_per_rank}_{nranks}_{pattern}")
+    trace_format.write_trace(d, registry=REGISTRY,
+                             merged_cst=merge.merged_entries,
+                             unique_cfgs=cfgres.unique_cfgs,
+                             cfg_index=cfgres.cfg_index,
+                             rank_timestamps=[b""] * nranks, meta_extra={})
+    return d
+
+
+def _timed(fn) -> Tuple[float, Any]:
+    t0 = time.perf_counter()
+    res = fn()
+    return time.perf_counter() - t0, res
+
+
+def sweep(records_per_rank_list: Sequence[int], nranks: int = 8,
+          pattern: str = "mixed_all", n_groups: int = 8) -> List[dict]:
+    rows: List[dict] = []
+    tmp = tempfile.mkdtemp(prefix="dfg_bench_")
+    try:
+        for rpr in records_per_rank_list:
+            d = _build_trace(rpr, nranks, pattern, n_groups, tmp)
+            reader = TraceReader(d)
+            reader.view()  # columnar decode off the timed path
+            grammar_items = sum(
+                sum(len(items) for items in g) for g in reader.unique_cfgs)
+            queries = [
+                ("dfg", lambda v: v.dfg()),
+                ("phases", lambda v: v.phases(0)),
+                ("rank_divergence", lambda v: v.rank_divergence()),
+            ]
+            for qname, q in queries:
+                view = TraceView(reader)  # fresh memos per query
+                wall_s, res = _timed(lambda: q(view))
+                rows.append({
+                    "records_per_rank": rpr, "nranks": nranks,
+                    "pattern": pattern, "query": qname,
+                    "n_records_total": view.total_records(),
+                    "grammar_items": grammar_items,
+                    "wall_s": wall_s,
+                    "result_size": len(res["edges"]) if qname == "dfg"
+                    else len(res) if qname == "phases"
+                    else len(res["per_rank"]),
+                })
+            shutil.rmtree(d, ignore_errors=True)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def _feed_epoch(rec: Recorder, rng: random.Random, epoch: int,
+                calls: int) -> None:
+    fids = {n: REGISTRY.id_of(n) for n in ("pwrite", "lseek", "write")}
+    t = epoch * (calls + 1) * 2
+    fd = "fd-0"
+    if epoch == 0:
+        rec.record(REGISTRY.id_of("open"), ("/data/f.bin", 2, 438), fd,
+                   0, t, t + 1)
+        t += 2
+    for i in range(calls):
+        kind = rng.random()
+        if kind < 0.6:
+            off = (epoch * calls + i) * 4096
+            rec.record(fids["pwrite"], (fd, b"x" * 4096, off), 4096,
+                       0, t, t + 1)
+        elif kind < 0.8:
+            rec.record(fids["lseek"], (fd, i * 256, 0), i * 256, 0, t, t + 1)
+        else:
+            rec.record(fids["write"], (fd, b"z" * 128), 128, 0, t, t + 1)
+        t += 2
+
+
+def incremental(epochs: int, calls_per_epoch: int) -> Dict[str, Any]:
+    """Stream one job epoch by epoch; after every commit answer the three
+    observability families from the service and account the folds."""
+    root = tempfile.mkdtemp(prefix="dfg_bench_stream_")
+    try:
+        rec = Recorder(rank=0, config=RecorderConfig(
+            trace_dir=os.path.join(root, "job")))
+        rng = random.Random(7)
+        _feed_epoch(rec, rng, 0, calls_per_epoch)
+        rec.flush()
+        lat: List[float] = []
+        with TraceService(root, mode="stitched",
+                          max_staleness_s=0.0) as svc:
+            for e in range(epochs):
+                if e:
+                    _feed_epoch(rec, rng, e, calls_per_epoch)
+                    rec.flush()
+                t0 = time.perf_counter()
+                svc.query("job", "dfg")
+                svc.phases("job", rank=0)
+                svc.anomalies("job")
+                lat.append(time.perf_counter() - t0)
+            folds = svc.stats()["cache"]["segment_folds"]
+        assert folds == epochs - 1, (
+            f"incremental contract broken: served {epochs} epochs with "
+            f"{folds} segment folds (expected {epochs - 1})")
+        return {"epochs": epochs, "calls_per_epoch": calls_per_epoch,
+                "segment_folds": folds,
+                "first_query_s": lat[0], "last_query_s": lat[-1]}
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def main(fast: bool = False) -> List[str]:
+    os.makedirs(ART, exist_ok=True)
+    sizes = (100, 1_000, 10_000) if fast else (1_000, 10_000, 100_000)
+    rows = sweep(sizes)
+    inc = incremental(epochs=4 if fast else 10,
+                      calls_per_epoch=200 if fast else 1_000)
+    out = {"config": {"fast": fast, "flat_factor": FLAT_FACTOR,
+                      "abs_slack_s": ABS_SLACK_S},
+           "rows": rows, "incremental": inc}
+    with open(os.path.join(ART, "dfg_phase.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    lines = []
+    for qname in ("dfg", "phases", "rank_divergence"):
+        pts = sorted((r for r in rows if r["query"] == qname),
+                     key=lambda r: r["records_per_rank"])
+        small, big = pts[0], pts[-1]
+        growth = big["n_records_total"] / max(small["n_records_total"], 1)
+        assert big["wall_s"] <= FLAT_FACTOR * small["wall_s"] + ABS_SLACK_S, (
+            f"{qname} wall time grew with records at fixed grammar size: "
+            f"{small['wall_s']:.6f}s -> {big['wall_s']:.6f}s "
+            f"over {growth:.0f}x records")
+        lines.append(
+            f"dfg_bench,{qname},records={small['n_records_total']}"
+            f"->{big['n_records_total']},wall_s={small['wall_s']:.6f}"
+            f"->{big['wall_s']:.6f},records_growth={growth:.0f}x")
+    lines.append(
+        f"dfg_bench,incremental,epochs={inc['epochs']},"
+        f"segment_folds={inc['segment_folds']},"
+        f"last_query_s={inc['last_query_s']:.6f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main(fast="--smoke" in sys.argv or "--fast" in sys.argv):
+        print(line)

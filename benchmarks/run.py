@@ -14,8 +14,8 @@ import time
 
 def main() -> None:
     fast = "--fast" in sys.argv
-    from . import flash_scaling, ior_pattern, kernel_bench, overhead, \
-        streaming_flush, tool_comparison, trace_service
+    from . import dfg_bench, flash_scaling, ior_pattern, kernel_bench, \
+        overhead, streaming_flush, tool_comparison, trace_service
 
     # reader_scaling is intentionally NOT in this list: CI runs it as its
     # own `python -m benchmarks.reader_scaling --smoke` step (and the full
@@ -30,6 +30,7 @@ def main() -> None:
                       ("overhead", overhead),
                       ("streaming_flush", streaming_flush),
                       ("trace_service", trace_service),
+                      ("dfg_bench", dfg_bench),
                       ("kernel_bench", kernel_bench)):
         t0 = time.time()
         try:

@@ -45,6 +45,7 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import dfg as _dfg
 from .encoding import (Handle, IterPattern, RankPattern,
                        concat_signature_columns, decode_signatures_batch)
 from .patterns import IntraPatternDecoder
@@ -354,6 +355,10 @@ class TraceView:
             self._pfstate: Dict[int, Tuple[Dict[Any, Tuple[int, int]],
                                            Dict[int, str]]] = {}
             self._ts: Dict[int, Optional[np.ndarray]] = {}
+            self._digrams: Dict[int, Tuple[Dict[Tuple[int, int], int],
+                                           Optional[int],
+                                           Optional[int]]] = {}
+            self._phases: Dict[int, List[Dict[str, Any]]] = {}
         else:
             # seeded construction (refreshed_view): the already-decoded
             # column prefix plus per-unique-CFG memos folded forward --
@@ -364,6 +369,8 @@ class TraceView:
             self._positions = dict(_reuse["positions"])
             self._pfstate = dict(_reuse["pfstate"])
             self._ts = dict(_reuse["ts"])
+            self._digrams = dict(_reuse["digrams"])
+            self._phases = dict(_reuse["phases"])
         self._cfg_mult: Dict[int, int] = {}
         for u in self.cfg_index:
             self._cfg_mult[u] = self._cfg_mult.get(u, 0) + 1
@@ -412,21 +419,169 @@ class TraceView:
     def total_records(self) -> int:
         return sum(self.total_terminal_counts().values())
 
-    def digram_counts(self, rank: int = 0,
+    def digram_counts(self, rank: Optional[int] = 0,
                       backend: Optional[str] = None
                       ) -> Dict[Tuple[int, int], int]:
-        """Adjacent-pair (digram) counts of one rank's expanded call-signature
+        """Adjacent-pair (digram) counts of the expanded call-signature
         stream -- the repeated-structure profile Sequitur compresses.
 
-        The expansion is materialized once as an int64 vector and the
-        histogram dispatched through :mod:`encode_backend` (NumPy
-        bincount or the ``grammar_stats`` digram kernel, per ``backend``).
+        Default path (``backend=None``): derived straight from the
+        grammar in O(|grammar|) via :func:`dfg.grammar_digrams` -- no
+        record expansion -- memoized per unique CFG.  ``rank=None``
+        aggregates over ALL ranks with one walk per unique CFG, scaled
+        by CFG multiplicity (the same trick as
+        :meth:`total_terminal_counts`).
+
+        An explicit ``backend`` keeps the expansion reference: the
+        stream is materialized as an int64 vector and the histogram
+        dispatched through :mod:`encode_backend` (NumPy bincount or the
+        ``grammar_stats`` digram kernel) -- O(records), kept as the
+        kernel-comparison and property-test path.
         """
-        stream = np.fromiter(
-            expand_grammar(self.grammars[self.cfg_index[rank]]),
-            dtype=np.int64)
+        if backend is not None:
+            if rank is None:
+                total: Dict[Tuple[int, int], int] = {}
+                for u, mult in self._cfg_mult.items():
+                    for k, c in self._digrams_expand(u, backend).items():
+                        total[k] = total.get(k, 0) + mult * c
+                return total
+            return self._digrams_expand(self.cfg_index[rank], backend)
+        if rank is None:
+            total = {}
+            for u, mult in self._cfg_mult.items():
+                for k, c in self._cfg_digrams(u)[0].items():
+                    total[k] = total.get(k, 0) + mult * c
+            return total
+        return dict(self._cfg_digrams(self.cfg_index[rank])[0])
+
+    def _digrams_expand(self, u: int, backend: Optional[str]
+                        ) -> Dict[Tuple[int, int], int]:
+        stream = np.fromiter(expand_grammar(self.grammars[u]),
+                             dtype=np.int64)
         from . import encode_backend as _eb
         return _eb.digram_histogram(stream, len(self._sigs), backend)
+
+    # -- DFG / phase / divergence observability (O(|grammar|)) ----------------
+
+    def _cfg_digrams(self, u: int) -> Tuple[Dict[Tuple[int, int], int],
+                                            Optional[int], Optional[int]]:
+        """``(edges, first, last)`` of unique CFG ``u``'s expansion --
+        O(|grammar|), memoized, and seeded forward by the incremental
+        refresh (one delta-sized walk per new epoch segment)."""
+        d = self._digrams.get(u)
+        if d is None:
+            d = _dfg.grammar_digrams(self.grammars[u])
+            self._digrams[u] = d
+        return d
+
+    def _cfg_phases(self, u: int) -> List[Dict[str, Any]]:
+        """Raw phase rows of unique CFG ``u`` (shared by every rank using
+        it): episode profile + dominant-set merge, O(|grammar|),
+        memoized and refresh-folded like :meth:`_cfg_digrams`."""
+        p = self._phases.get(u)
+        if p is None:
+            sigs = self._sigs
+            eps = _dfg.grammar_episodes(self.grammars[u],
+                                        lambda t: sigs[t].name)
+            p = _dfg.phase_segments(eps)
+            self._phases[u] = p
+        return p
+
+    def _label_of(self, t: int) -> Tuple[str, str]:
+        return _dfg.node_label(self._sigs[t])
+
+    def dfg(self, rank: Optional[int] = None) -> Dict[str, Any]:
+        """Directly-Follows Graph of one rank (or, default, all ranks
+        aggregated) at ``(func, pattern-class)`` node granularity.
+
+        Nodes carry occurrence counts (grammar-weighted), edges the
+        exact directly-follows counts of the expanded stream(s) --
+        derived entirely in the compressed domain: one
+        :func:`dfg.grammar_digrams` walk per unique CFG, scaled by CFG
+        multiplicity for the aggregate.  Label granularity makes the
+        graph identical across merged/stitched reads (whose terminal id
+        spaces differ) and across SPMD ranks whose offsets differ only
+        by rank.
+        """
+        if rank is None:
+            term_counts = self.total_terminal_counts()
+            edges = self.digram_counts(rank=None)
+        else:
+            term_counts = self.cfg_terminal_counts(self.cfg_index[rank])
+            edges = self._cfg_digrams(self.cfg_index[rank])[0]
+        node_ids: Dict[Tuple[str, str], int] = {}
+        nodes: List[Dict[str, Any]] = []
+
+        def nid(t: int) -> int:
+            lab = self._label_of(t)
+            i = node_ids.get(lab)
+            if i is None:
+                i = node_ids[lab] = len(nodes)
+                nodes.append({"func": lab[0], "pattern": lab[1],
+                              "count": 0})
+            return i
+
+        for t in sorted(term_counts):
+            nodes[nid(t)]["count"] += term_counts[t]
+        agg: Dict[Tuple[int, int], int] = {}
+        for (a, b), w in edges.items():
+            k = (nid(a), nid(b))
+            agg[k] = agg.get(k, 0) + w
+        rows = [{"src": a, "dst": b, "weight": w}
+                for (a, b), w in agg.items()]
+        rows.sort(key=lambda e: (-e["weight"], e["src"], e["dst"]))
+        return {"nodes": nodes, "edges": rows,
+                "n_records": sum(term_counts.values())}
+
+    def phases(self, rank: int = 0) -> List[Dict[str, Any]]:
+        """Phase segmentation of one rank's stream: contiguous record
+        ranges ``[start_record, end_record)`` where the dominant
+        function set is stable, labeled (``write-loop``, ``read``,
+        ``metadata``, ...).  Derived from the grammar's episode
+        structure -- O(|grammar|), no expansion; record positions come
+        from the closed-form per-rule expansion lengths, so they are
+        exact stream indices without materializing the stream."""
+        return _dfg.phase_report(self._cfg_phases(self.cfg_index[rank]))
+
+    def rank_divergence(self, threshold: float = 0.25) -> Dict[str, Any]:
+        """Per-rank structural divergence from the SPMD majority.
+
+        Every unique CFG's label-projected DFG is fingerprinted; the
+        fingerprint group covering the most ranks is the majority
+        behavior, and each rank is scored by :func:`dfg.dfg_distance`
+        against it (total variation on edge-weight distributions, in
+        [0, 1]).  Ranks above ``threshold`` are flagged divergent --
+        the structural signal behind the ``anomalies`` query family and
+        the ``dfg_divergent`` straggler reason.  Cost: one grammar walk
+        per unique CFG, never per rank.
+        """
+        if not self._cfg_mult:
+            return {"per_rank": [], "divergent": [], "majority_size": 0,
+                    "nranks": self.nranks, "threshold": threshold}
+        label_edges = {
+            u: _dfg.project_edges(self._cfg_digrams(u)[0], self._label_of)
+            for u in self._cfg_mult}
+        groups: Dict[tuple, List[int]] = {}
+        for u, le in label_edges.items():
+            fp = tuple(sorted(le.items()))
+            groups.setdefault(fp, []).append(u)
+
+        def group_ranks(us: List[int]) -> int:
+            return sum(self._cfg_mult[u] for u in us)
+
+        maj_fp = max(groups, key=lambda fp: (group_ranks(groups[fp]), fp))
+        maj_edges = dict(maj_fp)
+        per_rank = [round(_dfg.dfg_distance(
+            label_edges[self.cfg_index[r]], maj_edges), 9)
+            for r in range(self.nranks)]
+        return {
+            "per_rank": per_rank,
+            "divergent": [r for r, d in enumerate(per_rank)
+                          if d > threshold],
+            "majority_size": group_ranks(groups[maj_fp]),
+            "nranks": self.nranks,
+            "threshold": threshold,
+        }
 
     # -- lazy, memoized per-rank timestamps -----------------------------------
 
@@ -1132,9 +1287,9 @@ def refreshed_view(old_view: TraceView, reader,
     ``seg_store`` the segment's timestamp store.  Only the new segments'
     CST entries are decoded and only their (delta-sized) grammars are
     walked; every per-unique-CFG memo of ``old_view`` -- terminal counts,
-    first/last positions, per-file fold state, decompressed timestamps --
-    is carried forward through the provenance map, never re-derived from
-    already-loaded segments.
+    first/last positions, per-file fold state, DFG digram edges, phase
+    segmentation, decompressed timestamps -- is carried forward through
+    the provenance map, never re-derived from already-loaded segments.
     """
     cols = old_view.columns
     sigs = list(old_view._sigs)
@@ -1142,6 +1297,10 @@ def refreshed_view(old_view: TraceView, reader,
     positions = dict(old_view._positions)
     pfstate: Dict[int, Tuple[Dict[Any, Tuple[int, int]],
                              Dict[int, str]]] = {}
+    digrams: Dict[int, Tuple[Dict[Tuple[int, int], int],
+                             Optional[int], Optional[int]]] = \
+        dict(old_view._digrams)
+    phases: Dict[int, List[Dict[str, Any]]] = dict(old_view._phases)
     ts = dict(old_view._ts)
     functions = reader.functions
     first_fold = True
@@ -1164,6 +1323,11 @@ def refreshed_view(old_view: TraceView, reader,
                                        Dict[int, int]]] = {}
         new_pfstate: Dict[int, Tuple[Dict[Any, Tuple[int, int]],
                                      Dict[int, str]]] = {}
+        new_digrams: Dict[int, Tuple[Dict[Tuple[int, int], int],
+                                     Optional[int], Optional[int]]] = {}
+        new_phases: Dict[int, List[Dict[str, Any]]] = {}
+        seg_dfg: Dict[int, Any] = {}
+        seg_ph: Dict[int, Any] = {}
         for new_u, (old_u, seg_u) in enumerate(pairs):
             sr = rules_of(seg_u)
             # counts: always seeded (every query family needs them); the
@@ -1211,7 +1375,27 @@ def refreshed_view(old_view: TraceView, reader,
                     ob, occ = merged_pf.get(k, (0, 0))
                     merged_pf[k] = (ob + b, occ + c)
                 new_pfstate[new_u] = (merged_pf, exit_live)
+            # DFG / phases: seeded only where the old view had them
+            # (lazy memos) -- one DELTA-sized grammar walk per segment,
+            # shifted to the splice offset and stitched at the junction
+            od = digrams.get(old_u)
+            if od is not None:
+                sd = seg_dfg.get(seg_u)
+                if sd is None:
+                    sd = seg_dfg[seg_u] = _dfg.grammar_digrams(rules_of(seg_u))
+                new_digrams[new_u] = _dfg.fold_digrams(od, sd, toff)
+            op = phases.get(old_u)
+            if op is not None:
+                sp = seg_ph.get(seg_u)
+                if sp is None:
+                    sp = seg_ph[seg_u] = _dfg.phase_segments(
+                        _dfg.grammar_episodes(
+                            rules_of(seg_u),
+                            lambda t: sigs[t + toff].name))
+                new_phases[new_u] = _dfg.fold_phases(
+                    op, sp, sum(oc.values()))
         counts, positions, pfstate = new_counts, new_positions, new_pfstate
+        digrams, phases = new_digrams, new_phases
         # timestamps: append the segment's rows to already-decompressed
         # rank memos (untouched ranks stay lazy)
         for r, old_ts in list(ts.items()):
@@ -1222,4 +1406,5 @@ def refreshed_view(old_view: TraceView, reader,
         first_fold = False
     return TraceView(reader, _reuse={
         "columns": cols, "sigs": sigs, "counts": counts,
-        "positions": positions, "pfstate": pfstate, "ts": ts})
+        "positions": positions, "pfstate": pfstate, "ts": ts,
+        "digrams": digrams, "phases": phases})

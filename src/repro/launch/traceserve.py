@@ -12,6 +12,10 @@ table as jobs commit new epochs.
         --query overlap_ratio --rank 2 --t0 0 --t1 500000
     python -m repro.launch.traceserve --root runs/ --league
     python -m repro.launch.traceserve --root runs/ --job job_a --stragglers
+    python -m repro.launch.traceserve --root runs/ --job job_a --phases
+    python -m repro.launch.traceserve --root runs/ --job job_a --anomalies
+    python -m repro.launch.traceserve --root runs/ --job job_a \\
+        --query dfg --top 10
     python -m repro.launch.traceserve --root runs/ --watch --interval 2 \\
         --iterations 10
 
@@ -55,15 +59,26 @@ def build_parser() -> argparse.ArgumentParser:
     act.add_argument("--league", action="store_true",
                      help="bandwidth league table across all jobs")
     act.add_argument("--stragglers", action="store_true",
-                     help="per-rank straggler report for --job")
+                     help="per-rank reasons-attached straggler report "
+                          "for --job")
+    act.add_argument("--phases", action="store_true",
+                     help="phase segmentation of --job (--rank, default 0)")
+    act.add_argument("--anomalies", action="store_true",
+                     help="cross-rank DFG divergence report for --job")
     act.add_argument("--watch", action="store_true",
                      help="repeatedly print jobs + league table")
-    p.add_argument("--job", help="job name (for --query / --stragglers)")
+    p.add_argument("--job", help="job name (for --query / --stragglers / "
+                                 "--phases / --anomalies)")
     p.add_argument("--rank", type=int, default=None)
     p.add_argument("--t0", type=int, default=None)
     p.add_argument("--t1", type=int, default=None)
+    p.add_argument("--top", type=int, default=None,
+                   help="edge cutoff for --query dfg / digram_counts")
     p.add_argument("--threshold", type=float, default=0.5,
                    help="straggler cutoff as a fraction of the median")
+    p.add_argument("--divergence", type=float, default=0.25,
+                   help="DFG divergence cutoff (--anomalies / "
+                        "--stragglers)")
     p.add_argument("--interval", type=float, default=2.0,
                    help="--watch period in seconds")
     p.add_argument("--iterations", type=int, default=0,
@@ -89,6 +104,8 @@ def main(argv=None) -> int:
                 params["t0"] = args.t0
             if args.t1 is not None:
                 params["t1"] = args.t1
+            if args.top is not None:
+                params["top"] = args.top
             out = service.query(args.job, args.query, params).to_dict()
         elif args.league:
             out = {"league": service.league_table(),
@@ -97,7 +114,19 @@ def main(argv=None) -> int:
             if not args.job:
                 print("--stragglers needs --job", file=sys.stderr)
                 return 2
-            out = service.stragglers(args.job, threshold=args.threshold)
+            out = service.stragglers(args.job, threshold=args.threshold,
+                                     divergence=args.divergence)
+        elif args.phases:
+            if not args.job:
+                print("--phases needs --job", file=sys.stderr)
+                return 2
+            out = service.phases(args.job, rank=args.rank or 0).to_dict()
+        elif args.anomalies:
+            if not args.job:
+                print("--anomalies needs --job", file=sys.stderr)
+                return 2
+            out = service.anomalies(
+                args.job, threshold=args.divergence).to_dict()
         elif args.watch:
             i = 0
             try:
@@ -115,7 +144,8 @@ def main(argv=None) -> int:
             return 0
         else:
             print("pick an action: --list / --query / --league / "
-                  "--stragglers / --watch", file=sys.stderr)
+                  "--stragglers / --phases / --anomalies / --watch",
+                  file=sys.stderr)
             return 2
         print(json.dumps(out, indent=2, default=str))
     return 0

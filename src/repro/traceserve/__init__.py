@@ -20,10 +20,14 @@ and serves live compressed-domain queries over them:
 
 :class:`~repro.traceserve.engine.QueryEngine`
     the five ``analysis.py`` query families plus ``digram_counts``,
-    windowed ``bandwidth_bounds``/``overlap_ratio``, ``n_records`` and
-    ``coverage``, each answered from the cached view and memoized per
-    (job, query, generation); cross-job comparisons (bandwidth league
-    table, per-rank straggler detection) compose single-job answers.
+    windowed ``bandwidth_bounds``/``overlap_ratio``, ``n_records``,
+    ``coverage``, and the compressed-domain observability families
+    ``dfg`` / ``phases`` / ``anomalies`` (Directly-Follows Graph, phase
+    segmentation, cross-rank divergence -- all O(|grammar|), from
+    ``core/dfg.py``), each answered from the cached view and memoized
+    per (job, query, generation); cross-job comparisons (bandwidth
+    league table, reasons-attached straggler detection) compose
+    single-job answers.
 
 :class:`~repro.traceserve.service.TraceService`
     the thread-pool front end tying the three together: per-job staleness

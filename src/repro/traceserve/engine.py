@@ -4,8 +4,10 @@ One function, :func:`run_query`, maps a ``(family, params)`` request onto
 the :class:`TraceView` snapshot the cache handed out -- the five
 ``analysis.py`` query families (``io_summary``, ``size_histogram``,
 ``call_chains``, ``overlap_ratio``, ``consistency_pairs``) plus
-``digram_counts``, windowed ``bandwidth_bounds``, ``n_records`` and the
-structural ``coverage`` report.  All results are JSON-serializable.
+``digram_counts``, windowed ``bandwidth_bounds``, ``n_records``, the
+structural ``coverage`` report, and the compressed-domain DFG
+observability families (``dfg``, ``phases``, ``anomalies`` -- all
+O(|grammar|), see ``core/dfg.py``).  All results are JSON-serializable.
 
 :class:`QueryEngine` adds a per-``(job, family, params)`` memo keyed by
 the snapshot's *generation*: while no new epoch has been folded, a
@@ -28,7 +30,7 @@ from .cache import IncrementalViewCache, ViewSnapshot
 QUERY_FAMILIES = (
     "io_summary", "size_histogram", "call_chains", "overlap_ratio",
     "consistency_pairs", "digram_counts", "bandwidth_bounds", "n_records",
-    "coverage",
+    "coverage", "dfg", "phases", "anomalies",
 )
 
 
@@ -78,6 +80,19 @@ def run_query(snap: ViewSnapshot, family: str,
         return {"per_rank": per_rank, "total": sum(per_rank)}
     if family == "coverage":
         return dict(snap.coverage)
+    if family == "dfg":
+        rank = p.get("rank")
+        g = view.dfg(rank=None if rank is None else int(rank))
+        top = int(p.get("top", 30))
+        return {"n_nodes": len(g["nodes"]), "n_edges": len(g["edges"]),
+                "n_records": g["n_records"], "nodes": g["nodes"],
+                "edges": g["edges"][:top]}
+    if family == "phases":
+        rank = int(p.get("rank", 0))
+        return {"rank": rank, "phases": view.phases(rank=rank)}
+    if family == "anomalies":
+        return view.rank_divergence(
+            threshold=float(p.get("threshold", 0.25)))
     raise ValueError(
         f"unknown query family {family!r}; known: {QUERY_FAMILIES}")
 
@@ -182,13 +197,23 @@ class QueryEngine:
         return rows
 
     def stragglers(self, path: str, threshold: float = 0.5,
+                   divergence: float = 0.25,
                    max_staleness_s: Optional[float] = None
                    ) -> Dict[str, Any]:
-        """Ranks whose record count falls below ``threshold`` x the
-        median -- lagging or gapped participants.  Ranks missing from a
-        degraded epoch (``coverage.ranks_partial``) are flagged even when
-        their surviving records look balanced."""
+        """Per-rank straggler report with REASONS attached.
+
+        A rank is flagged ``lagging`` when its record count falls below
+        ``threshold`` x the median, ``partial_coverage`` when a degraded
+        epoch is missing its stream (``coverage.ranks_partial``), and
+        ``dfg_divergent`` when its grammar's label-projected DFG sits
+        more than ``divergence`` away from the SPMD majority (the
+        ``anomalies`` family).  ``reasons`` maps each flagged rank to
+        its reason list; ``stragglers`` stays the flat union for
+        compatibility.  Both sub-queries ride the per-generation memo.
+        """
         res = self.query(path, "n_records", max_staleness_s=max_staleness_s)
+        anom = self.query(path, "anomalies", {"threshold": divergence},
+                          max_staleness_s=max_staleness_s)
         per_rank: List[int] = res.value["per_rank"]
         srt = sorted(per_rank)
         median = (srt[len(srt) // 2] if len(srt) % 2
@@ -197,13 +222,24 @@ class QueryEngine:
         lagging = [r for r, n in enumerate(per_rank)
                    if n < threshold * median]
         partial = list(res.coverage.get("ranks_partial", []))
+        divergent = list(anom.value["divergent"])
+        reasons: Dict[int, List[str]] = {}
+        for rs, tag in ((lagging, "lagging"),
+                        (partial, "partial_coverage"),
+                        (divergent, "dfg_divergent")):
+            for r in rs:
+                reasons.setdefault(int(r), []).append(tag)
         return {
             "path": path,
             "median_records": median,
             "threshold": threshold,
+            "divergence_threshold": divergence,
             "per_rank": per_rank,
             "lagging": lagging,
             "ranks_partial": partial,
-            "stragglers": sorted(set(lagging) | set(partial)),
+            "dfg_divergent": divergent,
+            "divergence_per_rank": anom.value["per_rank"],
+            "reasons": {r: reasons[r] for r in sorted(reasons)},
+            "stragglers": sorted(reasons),
             "generation": res.generation,
         }

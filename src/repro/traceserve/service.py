@@ -8,7 +8,11 @@ CLI) talks to:
 * ``query(job, family, params)`` -- synchronous answer from a snapshot at
   most ``max_staleness_s`` behind the job's directory; ``submit`` is the
   same through the worker pool (concurrent clients).
-* ``league_table()`` / ``stragglers(job)`` -- cross-job comparisons.
+* ``league_table()`` / ``stragglers(job)`` -- cross-job comparisons;
+  ``stragglers`` attaches per-rank reasons (lagging / partial coverage /
+  DFG-divergent).
+* ``phases(job, rank)`` / ``anomalies(job)`` -- structural observability
+  straight from the grammar (``core/dfg.py``).
 * an optional background *watch thread* that refreshes cache-resident
   jobs every ``watch_interval_s``, so interactive queries mostly hit a
   fresh snapshot and pay dictionary-lookup latency.
@@ -105,10 +109,25 @@ class TraceService:
         return self.engine.league_table(
             paths, metric=metric, max_staleness_s=self.max_staleness_s)
 
-    def stragglers(self, job: str, threshold: float = 0.5) -> Dict[str, Any]:
+    def stragglers(self, job: str, threshold: float = 0.5,
+                   divergence: float = 0.25) -> Dict[str, Any]:
+        """Reasons-attached straggler report: per-rank ``lagging`` /
+        ``partial_coverage`` / ``dfg_divergent`` flags plus the flat
+        union (see :meth:`QueryEngine.stragglers`)."""
         return self.engine.stragglers(
-            self.resolve(job), threshold=threshold,
+            self.resolve(job), threshold=threshold, divergence=divergence,
             max_staleness_s=self.max_staleness_s)
+
+    def phases(self, job: str, rank: int = 0) -> QueryResult:
+        """Phase segmentation of one rank's stream (``phases`` family):
+        labeled ``[start_record, end_record)`` ranges straight from the
+        job's grammar, folded incrementally as epochs commit."""
+        return self.query(job, "phases", {"rank": rank})
+
+    def anomalies(self, job: str, threshold: float = 0.25) -> QueryResult:
+        """Cross-rank DFG divergence (``anomalies`` family): per-rank
+        distance from the SPMD-majority graph and the flagged ranks."""
+        return self.query(job, "anomalies", {"threshold": threshold})
 
     # -- background watch ------------------------------------------------------
 

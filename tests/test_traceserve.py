@@ -14,7 +14,10 @@ The properties under test --
     service while a writer commits never observe a torn view (every
     observed total is an exact epoch-boundary cumsum),
   * LRU eviction by resident size keeps generations monotonic,
-  * the CLI answers --list/--query/--league/--stragglers with JSON.
+  * stragglers carry per-rank reasons (lagging / partial_coverage /
+    dfg_divergent), not just a flat union,
+  * the CLI answers --list/--query/--league/--stragglers/--phases/
+    --anomalies with JSON.
 """
 
 import json
@@ -84,7 +87,8 @@ def _fresh_snapshot(path: str) -> ViewSnapshot:
 
 _FAMILIES_NO_PARAMS = ("io_summary", "size_histogram", "call_chains",
                        "overlap_ratio", "consistency_pairs",
-                       "digram_counts", "n_records")
+                       "digram_counts", "n_records",
+                       "dfg", "phases", "anomalies")
 
 
 # ---------------------------------------------------------------------------
@@ -326,7 +330,11 @@ def test_degraded_epoch_coverage_propagates_into_responses(tmp_path):
     assert r1.value == run_query(fresh, "n_records")
     assert r1.coverage["degraded_epochs"] == \
         fresh.coverage["degraded_epochs"]
-    assert dead in svc.stragglers("job")["stragglers"]
+    rep = svc.stragglers("job")
+    assert dead in rep["stragglers"]
+    # the report carries the REASON, not just the union membership
+    assert "partial_coverage" in rep["reasons"][dead]
+    assert dead in rep["ranks_partial"]
     assert svc.query("job", "io_summary").value == \
         run_query(fresh, "io_summary")
     svc.close()
@@ -484,9 +492,34 @@ def test_cli_list_query_league_stragglers(tmp_path, capsys):
                      "--stragglers"]) == 0
     doc = json.loads(capsys.readouterr().out)
     assert doc["stragglers"] == []
+    assert doc["reasons"] == {} and doc["dfg_divergent"] == []
+
+    assert cli.main(["--root", str(root), "--job", "heavy",
+                     "--phases"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["family"] == "phases"
+    ph = doc["value"]["phases"]
+    assert ph and ph[0]["start_record"] == 0
+    assert all(set(p) >= {"start_record", "end_record", "dominant_funcs",
+                          "label"} for p in ph)
+
+    assert cli.main(["--root", str(root), "--job", "heavy",
+                     "--anomalies", "--divergence", "0.1"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["family"] == "anomalies"
+    assert doc["value"]["threshold"] == 0.1
+    assert len(doc["value"]["per_rank"]) == doc["value"]["nranks"]
+
+    assert cli.main(["--root", str(root), "--job", "heavy",
+                     "--query", "dfg", "--top", "3"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["family"] == "dfg" and len(doc["value"]["edges"]) <= 3
+    assert doc["value"]["n_records"] > 0
 
     # actions needing --job fail cleanly
     assert cli.main(["--root", str(root), "--query", "io_summary"]) == 2
+    assert cli.main(["--root", str(root), "--phases"]) == 2
+    assert cli.main(["--root", str(root), "--anomalies"]) == 2
     capsys.readouterr()
 
 
